@@ -1,0 +1,140 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows per benchmark; sections:
+  table1    figures of merit of the 22FDX cluster (paper Table I)
+  fig5      roofline points for the paper's kernel suite (paper Fig. 5)
+  table2    DNN-training efficiency, NTX 16x..512x (paper Table II)
+  fig6_7    energy/area-efficiency ratios vs GPUs (paper Figs. 6-7)
+  precision wide-accumulator RMSE study (paper §II-C claim)
+  kernels   measured wall-clock of our kernels on CPU (jnp ref path +
+            Pallas interpret-mode sanity numbers)
+  roofline  TPU roofline table from the dry-run artifacts (if present)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def _t(fn, *args, reps=3, **kw):
+    fn(*args, **kw)                      # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args, **kw)
+    try:
+        import jax
+        jax.block_until_ready(r)
+    except Exception:
+        pass
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_table1():
+    from repro.perfmodel import ntx
+    us = _t(ntx.table1_figures)
+    for k, v in ntx.table1_figures().items():
+        print(f"table1.{k},{us:.1f},{v:.3f}")
+    print(f"table1.practical_peak_fraction,{us:.1f},"
+          f"{ntx.peak_utilization_bound():.3f}")
+
+
+def bench_fig5():
+    from repro.perfmodel import ntx
+    us = _t(ntx.figure5_suite)
+    for name, p in ntx.figure5_suite().items():
+        tag = name.replace(" ", "_")
+        print(f"fig5.{tag}.gflops,{us:.1f},{p.gflops:.3f}")
+        print(f"fig5.{tag}.intensity,{us:.1f},{p.intensity:.3f}")
+
+
+def bench_table2():
+    from repro.perfmodel import dnn
+    pm = dnn.calibrate()
+    us = _t(dnn.table2, pm)
+    for row in dnn.table2(pm):
+        tag = f"ntx{row['n_clusters']}_{row['node_nm']}nm"
+        print(f"table2.{tag}.model,{us:.1f},{row['model_geomean']}")
+        print(f"table2.{tag}.paper,{us:.1f},{row['paper_geomean']}")
+        print(f"table2.{tag}.rel_err,{us:.1f},{row['rel_err']}")
+
+
+def bench_fig6_7():
+    from repro.perfmodel import dnn
+    pm = dnn.calibrate()
+    us = _t(dnn.gpu_comparison, pm)
+    for k, v in dnn.gpu_comparison(pm).items():
+        print(f"fig6_7.{k},{us:.1f},{v:.3f}")
+
+
+def bench_precision():
+    from repro.core.precision import conv_layer_rmse_study
+    us = _t(conv_layer_rmse_study, reps=1, n_outputs=64)
+    r = conv_layer_rmse_study(n_outputs=128)
+    for k, v in r.items():
+        print(f"precision.{k},{us:.1f},{v:.4g}")
+
+
+def bench_kernels():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((512, 512)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((512, 512)).astype(np.float32))
+    img = jnp.asarray(rng.standard_normal((256, 256)).astype(np.float32))
+    ker = jnp.asarray(rng.standard_normal((3, 3)).astype(np.float32))
+    x2 = jnp.asarray(rng.standard_normal((128, 2048)).astype(np.float32))
+    gemm_j = jax.jit(lambda a, b: ref.gemm(a, b))
+    us = _t(gemm_j, a, b, reps=10)
+    print(f"kernels.gemm_512_ref,{us:.1f},{2*512**3/(us*1e-6)/1e9:.2f}")
+    conv_j = jax.jit(lambda i, k: ref.conv2d(i, k))
+    us = _t(conv_j, img, ker, reps=10)
+    print(f"kernels.conv3x3_256_ref,{us:.1f},"
+          f"{2*9*254*254/(us*1e-6)/1e9:.2f}")
+    red_j = jax.jit(lambda x: ref.reduce('max', x))
+    us = _t(red_j, x2, reps=10)
+    print(f"kernels.reduce_max_ref,{us:.1f},{x2.size*4/(us*1e-6)/1e9:.2f}")
+    with ops.backend("pallas_interpret"):
+        us = _t(ops.gemm, a[:128, :128], b[:128, :128], reps=1)
+        print(f"kernels.gemm_128_pallas_interpret,{us:.1f},1")
+
+
+def bench_roofline():
+    import os
+    d = "results/dryrun"
+    if not os.path.isdir(d) or not os.listdir(d):
+        print("roofline.skipped,0,0")
+        return
+    from repro.perfmodel import tpu_roofline
+    rows = tpu_roofline.roofline_table(d)
+    for r in rows:
+        if r.get("skipped"):
+            continue
+        tag = f"{r['arch']}.{r['shape']}"
+        print(f"roofline.{tag}.dominant_{r['dominant']},0,"
+              f"{r['bound_time_s']:.4g}")
+        print(f"roofline.{tag}.fraction,0,{r['roofline_fraction']:.4g}")
+
+
+SECTIONS = {
+    "table1": bench_table1,
+    "fig5": bench_fig5,
+    "table2": bench_table2,
+    "fig6_7": bench_fig6_7,
+    "precision": bench_precision,
+    "kernels": bench_kernels,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(SECTIONS)
+    print("name,us_per_call,derived")
+    for name in which:
+        SECTIONS[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Quickstart: the NTX descriptor engine + kernels in five minutes.
+
+Shows the paper's core abstraction end-to-end:
+  1. program a GEMV as one NTX descriptor (5 HWLs + 3 AGUs) and execute it
+     on the functional engine,
+  2. the same descriptor's delta-step encoding (what the silicon loads),
+  3. the TPU-native kernels (Pallas, interpret mode here) for the paper's
+     kernel suite,
+  4. the wide-accumulator precision claim.
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import (Agu, Descriptor, Opcode, engine, gemv,
+                        strides_to_hw_steps)
+from repro.core.precision import conv_layer_rmse_study
+from repro.kernels import ops, ref
+
+rng = np.random.default_rng(0)
+
+# ----------------------------------------------------------------- 1.
+print("== 1. GEMV as one NTX command ==")
+m, n = 8, 16
+mem = np.zeros(1024, np.float32)
+A = rng.standard_normal((m, n)).astype(np.float32)
+x = rng.standard_normal(n).astype(np.float32)
+mem[:m * n] = A.ravel()
+mem[512:512 + n] = x
+desc = gemv(m, n, a_base=0, x_base=512, y_base=768)
+print(f"descriptor: bounds={desc.bounds} opcode={desc.opcode.value} "
+      f"init/store level={desc.init_level}")
+print(f"flops={desc.flops()} bytes={desc.bytes_moved()} "
+      f"intensity={desc.operational_intensity():.3f} flop/B")
+out = engine.execute(desc, mem)
+print("matches numpy:", np.allclose(out[768:768 + m], A @ x, atol=1e-5))
+
+# ----------------------------------------------------------------- 2.
+print("\n== 2. hardware delta-step encoding (AGU0) ==")
+steps = strides_to_hw_steps(desc.agu0.strides[:2], desc.bounds)
+print(f"affine strides {desc.agu0.strides[:2]} -> per-level steps {steps}")
+
+# ----------------------------------------------------------------- 3.
+print("\n== 3. TPU kernels (Pallas, interpret mode) ==")
+with ops.backend("pallas_interpret"):
+    a = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    c = ops.gemm(a, b)
+    print("gemm ok:", np.allclose(c, np.asarray(a) @ np.asarray(b),
+                                  atol=1e-3))
+    img = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    ker = jnp.asarray(rng.standard_normal((3, 3)), jnp.float32)
+    print("conv3x3 ok:", np.allclose(ops.conv2d(img, ker),
+                                     ref.conv2d(img, ker), atol=1e-4))
+    v = jnp.asarray(rng.standard_normal((4, 1000)), jnp.float32)
+    print("argmax ok:", np.array_equal(ops.reduce("argmax", v),
+                                       ref.reduce("argmax", v)))
+
+# ----------------------------------------------------------------- 4.
+print("\n== 4. PCS wide-accumulator precision (paper §II-C) ==")
+r = conv_layer_rmse_study(n_outputs=32)
+print(f"RMSE fp32-chained : {r['rmse_fp32_chained']:.3e}")
+print(f"RMSE PCS (exact)  : {r['rmse_pcs']:.3e}  "
+      f"({r['ratio_naive_over_pcs']:.1f}x better; paper reports 1.7x on a "
+      f"real conv layer)")

@@ -1,0 +1,87 @@
+"""HPC example: the paper's §III-B stencil/BLAS suite on the NTX kernels,
+with the analytical roofline beside measured CPU wall-clock.
+
+Reproduces the structure of Figure 5: memory-bound kernels pin the
+bandwidth roof, GEMM/conv pin the compute roof.
+
+Run: PYTHONPATH=src python examples/stencil_hpc.py
+"""
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.perfmodel import ntx
+
+rng = np.random.default_rng(0)
+
+
+def wallclock(fn, *args, reps=5):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+print(f"{'kernel':14s} {'NTX model':>22s}   {'CPU measured':>14s}")
+print("-" * 56)
+
+# BLAS-1: AXPY (memory bound on NTX)
+n = 1 << 20
+x = jnp.asarray(rng.standard_normal(n), jnp.float32)
+y = jnp.asarray(rng.standard_normal(n), jnp.float32)
+ax = jax.jit(lambda x, y: ref.axpy(2.5, x, y))
+t = wallclock(ax, x, y)
+p = ntx.axpy(n)
+print(f"{'AXPY 1M':14s} {p.gflops:8.2f} Gflop/s (mem)   "
+      f"{2 * n / t / 1e9:8.2f} Gflop/s")
+
+# BLAS-3: GEMM (compute bound)
+m = 512
+a = jnp.asarray(rng.standard_normal((m, m)), jnp.float32)
+b = jnp.asarray(rng.standard_normal((m, m)), jnp.float32)
+gm = jax.jit(ref.gemm)
+t = wallclock(gm, a, b)
+p = ntx.gemm(m, m, m)
+print(f"{'GEMM 512':14s} {p.gflops:8.2f} Gflop/s (cmp)   "
+      f"{2 * m**3 / t / 1e9:8.2f} Gflop/s")
+
+# conv 3x3/5x5/7x7
+img = jnp.asarray(rng.standard_normal((512, 512)), jnp.float32)
+for ks in (3, 5, 7):
+    ker = jnp.asarray(rng.standard_normal((ks, ks)), jnp.float32)
+    cv = jax.jit(ref.conv2d)
+    t = wallclock(cv, img, ker)
+    fl = 2 * ks * ks * (512 - ks + 1) ** 2
+    p = ntx.conv2d(256, 256, ks)
+    print(f"{f'CONV {ks}x{ks}':14s} {p.gflops:8.2f} Gflop/s (cmp)   "
+          f"{fl / t / 1e9:8.2f} Gflop/s")
+
+# Laplace stencils 1D/2D/3D (memory bound)
+for d, shape in ((1, (1 << 20,)), (2, (1024, 1024)), (3, (96, 96, 96))):
+    xs = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    lp = jax.jit(ref.laplace)
+    t = wallclock(lp, xs)
+    pts = 2 * d + 1
+    fl = 2 * pts * int(np.prod([s - 2 for s in shape]))
+    p = ntx.laplace(d, {1: 1 << 20, 2: 1024, 3: 96}[d])
+    print(f"{f'LAP{d}D':14s} {p.gflops:8.2f} Gflop/s (mem)   "
+          f"{fl / t / 1e9:8.2f} Gflop/s")
+
+# the 13-pt diffusion stencil
+xs = jnp.asarray(rng.standard_normal((1024, 1024)), jnp.float32)
+df = jax.jit(ref.diffusion)
+t = wallclock(df, xs)
+fl = 2 * 13 * (1020 * 1020)
+p = ntx.diffusion(1024)
+print(f"{'DIFF (13pt)':14s} {p.gflops:8.2f} Gflop/s (mem)   "
+      f"{fl / t / 1e9:8.2f} Gflop/s")
+
+print("\nNTX model column reproduces the paper's Fig. 5 operating points;")
+print("the practical peak is 17.4 Gflop/s (87% of 20; banking stalls) and")
+print("the practical bandwidth roof is 4.35 GB/s.")

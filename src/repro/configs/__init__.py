@@ -1,0 +1,51 @@
+"""Architecture registry: ``get(name)`` -> ArchConfig; ``ARCHS`` lists all.
+
+One module per assigned architecture; every module exports ``CONFIG`` and a
+``reduced()`` constructor for CPU smoke tests. ``shapes.py`` defines the
+assigned input-shape set and ``input_specs()``.
+"""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "yi_9b",
+    "phi3_medium_14b",
+    "granite_3_8b",
+    "llama3_8b",
+    "deepseek_v2_lite_16b",
+    "phi35_moe_42b",
+    "whisper_medium",
+    "qwen2_vl_2b",
+    "mamba2_13b",
+    "jamba_v01_52b",
+]
+
+_ALIASES = {
+    "yi-9b": "yi_9b",
+    "phi3-medium-14b": "phi3_medium_14b",
+    "granite-3-8b": "granite_3_8b",
+    "llama3-8b": "llama3_8b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b",
+    "whisper-medium": "whisper_medium",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "mamba2-1.3b": "mamba2_13b",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+}
+
+
+def get(name: str):
+    mod = _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    return importlib.import_module(f"repro.configs.{mod}").CONFIG
+
+
+def get_reduced(name: str):
+    mod = _ALIASES.get(name, name.replace("-", "_").replace(".", "_"))
+    return importlib.import_module(f"repro.configs.{mod}").reduced()
+
+
+from .shapes import SHAPES, input_specs, shape_applicable  # noqa: E402
+
+__all__ = ["ARCHS", "get", "get_reduced", "SHAPES", "input_specs",
+           "shape_applicable"]

@@ -1,0 +1,113 @@
+"""Assigned input shapes and ShapeDtypeStruct stand-ins for the dry-run.
+
+Shapes (assignment):
+  train_4k     seq_len=4096   global_batch=256   (training: train_step)
+  prefill_32k  seq_len=32768  global_batch=32    (inference prefill)
+  decode_32k   seq_len=32768  global_batch=128   (decode: serve_step, one
+                                                  new token, KV cache 32k)
+  long_500k    seq_len=524288 global_batch=1     (long-context decode;
+                                                  SSM/hybrid archs only)
+
+``input_specs(cfg, shape)`` returns {name: jax.ShapeDtypeStruct} stand-ins
+— weak-type-correct, shardable, NO device allocation. Decode shapes include
+the cache pytree spec (via jax.eval_shape over init_cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ArchConfig, Model
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: str) -> tuple[bool, str]:
+    """(applicable?, reason-if-not). Skips recorded in EXPERIMENTS.md."""
+    if shape == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, ("long_500k requires sub-quadratic attention; "
+                       f"{cfg.name} is pure full-attention (assignment: "
+                       "run for SSM/hybrid only)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, b: int, s: int) -> Dict[str, Any]:
+    """Training/prefill batch ShapeDtypeStructs for one arch."""
+    specs = {"tokens": _sds((b, s), jnp.int32),
+             "labels": _sds((b, s), jnp.int32)}
+    if cfg.encoder_decoder:
+        specs["enc_embeds"] = _sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.n_patches:
+        specs["img_embeds"] = _sds((b, cfg.n_patches, cfg.d_model),
+                                   jnp.bfloat16)
+        specs["loss_mask"] = _sds((b, s), jnp.float32)
+    if cfg.mrope:
+        specs["pos3"] = _sds((3, b, s), jnp.int32)
+    return specs
+
+
+def cache_specs(cfg: ArchConfig, b: int, s: int):
+    model = Model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(b, s, jnp.bfloat16))
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> Dict[str, Any]:
+    """All inputs (minus params) for the step function of this cell."""
+    sh = SHAPES[shape_name]
+    b, s = sh.global_batch, sh.seq_len
+    if sh.kind in ("train", "prefill"):
+        return {"batch": batch_specs(cfg, b, s)}
+    # decode: one new token against a cache of seq_len
+    return {"tokens": _sds((b, 1), jnp.int32),
+            "cache": cache_specs(cfg, b, s),
+            "fill": _sds((), jnp.int32)}
+
+
+def param_specs(cfg: ArchConfig):
+    model = Model(cfg)
+    return jax.eval_shape(lambda: model.init(0))
+
+
+def count_params(cfg: ArchConfig) -> int:
+    return sum(int(np_prod(x.shape)) for x in jax.tree.leaves(param_specs(cfg)))
+
+
+def np_prod(t):
+    n = 1
+    for x in t:
+        n *= int(x)
+    return n
+
+
+def active_params(cfg: ArchConfig) -> int:
+    """Active parameters per token (MoE: top_k + shared experts only)."""
+    total = count_params(cfg)
+    if not cfg.moe:
+        return total
+    # subtract inactive routed-expert parameters
+    e, k = cfg.n_experts, cfg.top_k
+    expert_p = 3 * cfg.d_model * cfg.d_ff_expert
+    n_moe_layers = sum(1 for i in range(cfg.n_layers) if cfg.is_moe_layer(i))
+    inactive = n_moe_layers * (e - k) * expert_p
+    return total - inactive

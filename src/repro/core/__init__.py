@@ -1,0 +1,29 @@
+"""repro.core — the paper's contribution as a composable JAX module.
+
+The NTX descriptor ISA (descriptor.py), its functional execution engines
+(engine.py), the PCS wide-accumulator precision emulation (precision.py),
+the double-buffered tile scheduler (scheduler.py) and the hardware specs
+(cluster.py).
+"""
+from .descriptor import (Agu, Descriptor, Opcode, axpy, gemv, gemm, memcpy,
+                         memset, relu, argmax, laplace1d,
+                         hw_steps_to_strides, strides_to_hw_steps,
+                         NUM_LOOPS, NUM_AGUS, MAX_HW_COUNT)
+from .engine import execute, execute_vectorized, execute_jax
+from .cluster import NtxClusterSpec, TpuChipSpec, PAPER_CLUSTER, TPU_V5E
+from .scheduler import (TileSchedule, Tile, schedule_axpy, schedule_gemv,
+                        schedule_gemm, schedule_conv2d, schedule_stencil,
+                        pick_matmul_blocks)
+from . import precision
+from .dispatch import dispatch
+
+__all__ = [
+    "Agu", "Descriptor", "Opcode", "axpy", "gemv", "gemm", "memcpy",
+    "memset", "relu", "argmax", "laplace1d", "hw_steps_to_strides",
+    "strides_to_hw_steps", "NUM_LOOPS", "NUM_AGUS", "MAX_HW_COUNT",
+    "execute", "execute_vectorized", "execute_jax",
+    "NtxClusterSpec", "TpuChipSpec", "PAPER_CLUSTER", "TPU_V5E",
+    "TileSchedule", "Tile", "schedule_axpy", "schedule_gemv",
+    "schedule_gemm", "schedule_conv2d", "schedule_stencil",
+    "pick_matmul_blocks", "precision", "dispatch",
+]

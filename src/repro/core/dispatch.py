@@ -1,0 +1,102 @@
+"""NTX command decoder for TPU: Descriptor -> kernel dispatch.
+
+The silicon's controller decodes a descriptor and issues micro-instructions
+to the FPU; this module is the TPU analogue — it pattern-matches a
+descriptor against the kernel suite (GEMM/GEMV panels, the elementwise
+command set, reductions) and dispatches to the corresponding
+``repro.kernels.ops`` entry point (Pallas on TPU, oracle elsewhere),
+falling back to the functional engine for loop nests with no blocked
+equivalent. Round-trips are validated against ``engine.execute`` in
+tests/test_dispatch.py.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+from . import engine
+from .descriptor import Agu, Descriptor, Opcode
+
+_EW_OPS = {Opcode.AXPY: "axpy", Opcode.ADD: "add", Opcode.SUB: "sub",
+           Opcode.MUL: "mul", Opcode.MASK: "mask", Opcode.RELU: "relu",
+           Opcode.THRESH: "thresh", Opcode.COPY: "copy", Opcode.SET: "set"}
+_RED_OPS = {Opcode.VSUM: "sum", Opcode.MIN: "min", Opcode.MAX: "max",
+            Opcode.ARGMIN: "argmin", Opcode.ARGMAX: "argmax"}
+
+
+def _is_contiguous_1d(desc: Descriptor) -> bool:
+    return (len(desc.bounds) == 1
+            and desc.agu0.strides[0] in (0, 1)
+            and desc.agu1.strides[0] in (0, 1)
+            and desc.agu2.strides[0] in (0, 1))
+
+
+def _match_gemm(desc: Descriptor) -> Optional[tuple]:
+    """C[m,n] = A[m,k] @ B[k,n] with the canonical AGU pattern."""
+    if (desc.opcode is not Opcode.MAC or len(desc.bounds) != 3
+            or desc.init_level != 1 or desc.store_level != 1):
+        return None
+    k, n, m = desc.bounds
+    a0, a1, a2 = desc.agu0, desc.agu1, desc.agu2
+    if (a0.strides[:3] == (1, 0, k) and a1.strides[:3] == (n, 1, 0)
+            and a2.strides[:3] == (0, 1, n)):
+        return m, n, k
+    return None
+
+
+def _match_gemv(desc: Descriptor) -> Optional[tuple]:
+    if (desc.opcode is not Opcode.MAC or len(desc.bounds) != 2
+            or desc.init_level != 1 or desc.store_level != 1):
+        return None
+    n, m = desc.bounds
+    a0, a1, a2 = desc.agu0, desc.agu1, desc.agu2
+    if (a0.strides[1] == n and a0.strides[0] == 1
+            and a1.strides[:2] == (1, 0) and a2.strides[:2] == (0, 1)):
+        return m, n
+    return None
+
+
+def dispatch(desc: Descriptor, mem: jnp.ndarray) -> jnp.ndarray:
+    """Execute one NTX command on the flat memory via the kernel suite.
+
+    Returns the updated memory (functional semantics, like the engine).
+    """
+    mem = jnp.asarray(mem, jnp.float32)
+
+    gm = _match_gemm(desc)
+    if gm is not None:
+        m, n, k = gm
+        A = jnp.reshape(mem[desc.agu0.base:desc.agu0.base + m * k], (m, k))
+        B = jnp.reshape(mem[desc.agu1.base:desc.agu1.base + k * n], (k, n))
+        C = ops.gemm(A, B)
+        return mem.at[desc.agu2.base:desc.agu2.base + m * n].set(
+            C.reshape(-1))
+
+    gv = _match_gemv(desc)
+    if gv is not None:
+        m, n = gv
+        A = jnp.reshape(mem[desc.agu0.base:desc.agu0.base + m * n], (m, n))
+        x = mem[desc.agu1.base:desc.agu1.base + n]
+        y = ops.gemm(A, x[:, None])[:, 0]
+        return mem.at[desc.agu2.base:desc.agu2.base + m].set(y)
+
+    if desc.opcode in _EW_OPS and _is_contiguous_1d(desc):
+        n = desc.bounds[0]
+        x = mem[desc.agu0.base:desc.agu0.base + n][None]
+        y = (mem[desc.agu1.base:desc.agu1.base + n][None]
+             if desc.reads_per_iter >= 2 else None)
+        out = ops.elementwise(_EW_OPS[desc.opcode], x, y, imm=desc.imm)
+        return mem.at[desc.agu2.base:desc.agu2.base + n].set(out[0])
+
+    if (desc.opcode in _RED_OPS and len(desc.bounds) == 1
+            and desc.init_level == 1 and desc.agu0.strides[0] == 1):
+        n = desc.bounds[0]
+        x = mem[desc.agu0.base:desc.agu0.base + n][None]
+        red = ops.reduce(_RED_OPS[desc.opcode], x)
+        return mem.at[desc.agu2.base].set(red[0].astype(jnp.float32))
+
+    # no blocked kernel for this nest: functional engine fallback
+    return jnp.asarray(engine.execute_vectorized(desc, np.asarray(mem)))

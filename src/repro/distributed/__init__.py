@@ -1,0 +1,4 @@
+"""repro.distributed - meshes, sharding rules, collectives, pipeline."""
+from . import sharding, collectives, overlap, pipeline
+
+__all__ = ["sharding", "collectives", "overlap", "pipeline"]

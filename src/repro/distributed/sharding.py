@@ -1,0 +1,225 @@
+"""Sharding rules: DP / TP / EP / SP partition specs for every pytree.
+
+Conventions (see DESIGN.md §5):
+  * mesh axes: ("data", "model") single-pod; ("pod", "data", "model")
+    multi-pod. ``pod`` composes with ``data`` for batch/grad sharding (pure
+    DP across pods by default; pipeline stages over pods are available via
+    distributed.pipeline).
+  * TP (model axis): attention heads + FFN hidden Megatron-style; vocab
+    parallel embed/unembed; MoE experts across model (EP); mamba d_inner
+    across model.
+  * ZeRO-1: optimizer state (fp32 master, m, v) additionally sharded over
+    the data axes on the first dimension that divides evenly.
+  * Activations: batch over (pod, data); long-context decode caches shard
+    the sequence axis over model (SP).
+
+Rules are name-based over the parameter pytree paths — one place to audit.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ArchConfig
+
+
+def _data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+# name -> spec builder; %M = model axis
+_RULES = {
+    # embeddings (vocab-parallel)
+    "embed": lambda nd: _shard_last(nd, 0),         # (vocab, d)
+    "unembed": lambda nd: _shard_last(nd, nd - 1),  # (d, vocab)
+    # attention
+    "wq": lambda nd: _shard_last(nd, nd - 1),
+    "wk": lambda nd: _shard_last(nd, nd - 1),
+    "wv": lambda nd: _shard_last(nd, nd - 1),
+    "bq": lambda nd: _shard_last(nd, nd - 1),
+    "bk": lambda nd: _shard_last(nd, nd - 1),
+    "bv": lambda nd: _shard_last(nd, nd - 1),
+    "wo": lambda nd: _shard_last(nd, nd - 2),       # (hd*h, d) row-parallel
+    # MLA
+    "wdkv": lambda nd: _replicate(nd),              # shared latent: small
+    "wuk": lambda nd: _shard_last(nd, nd - 1),
+    "wuv": lambda nd: _shard_last(nd, nd - 1),
+    "kv_norm": lambda nd: _replicate(nd),
+    # dense mlp
+    "w1": lambda nd: _shard_last(nd, nd - 1),
+    "w3": lambda nd: _shard_last(nd, nd - 1),
+    "w2": lambda nd: _shard_last(nd, nd - 2),       # (ff, d) row-parallel
+    # moe
+    "router": lambda nd: _replicate(nd),
+    # ssm
+    "wz": lambda nd: _shard_last(nd, nd - 1),
+    "wx": lambda nd: _shard_last(nd, nd - 1),
+    "wb": lambda nd: _replicate(nd),
+    "wc": lambda nd: _replicate(nd),
+    "wdt": lambda nd: _shard_last(nd, nd - 1),
+    "dt_bias": lambda nd: _shard_last(nd, nd - 1),
+    "conv_x": lambda nd: _shard_last(nd, nd - 1),
+    "conv_x_b": lambda nd: _shard_last(nd, nd - 1),
+    "conv_b": lambda nd: _replicate(nd),
+    "conv_b_b": lambda nd: _replicate(nd),
+    "conv_c": lambda nd: _replicate(nd),
+    "conv_c_b": lambda nd: _replicate(nd),
+    "A_log": lambda nd: _shard_last(nd, nd - 1),
+    "D": lambda nd: _shard_last(nd, nd - 1),
+    "norm": lambda nd: _shard_last(nd, nd - 1),     # (d_inner,) gated norm
+    "img_proj": lambda nd: _replicate(nd),
+}
+
+# keys inside moe expert stacks: leading expert dim -> EP over model
+_MOE_EXPERT_KEYS = {"w1", "w2", "w3"}
+
+
+def _shard_last(nd: int, dim: int) -> P:
+    spec = [None] * nd
+    spec[dim] = "model"
+    return P(*spec)
+
+
+def _replicate(nd: int) -> P:
+    return P(*([None] * nd))
+
+
+def _leaf_spec(path, leaf) -> P:
+    nd = leaf.ndim
+    names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    name = names[-1]
+    # moe experts: (..., E, d, ff) — distinguished from dense mlps (which
+    # share the w1/w2/w3 names) by the extra expert axis (nd >= 4 once
+    # period-stacked)
+    if (name in _MOE_EXPERT_KEYS and "ffn" in names
+            and "shared" not in names and nd >= 4):
+        spec = [None] * nd
+        spec[nd - 3] = "model"                      # EP over the expert axis
+        return P(*spec)
+    if name in _RULES:
+        return _RULES[name](nd)
+    # norms / scalars / anything else: replicated
+    return _replicate(nd)
+
+
+_CTX_ATTN_KEYS = {"wq", "wk", "wv", "bq", "bk", "bv", "wo"}
+
+
+def param_specs(params_shape: Any, replicate_attn: bool = False) -> Any:
+    """Pytree of PartitionSpec matching a params (shape) pytree.
+
+    ``replicate_attn``: context-parallel layout — attention projections
+    replicated so attention runs head-complete on local sequence shards."""
+
+    def leaf(path, x):
+        name = getattr(path[-1], "key", None)
+        if replicate_attn and name in _CTX_ATTN_KEYS:
+            return _replicate(x.ndim)
+        return _leaf_spec(path, x)
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+def param_shardings(mesh: Mesh, params_shape: Any,
+                    replicate_attn: bool = False) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params_shape, replicate_attn))
+
+
+# ----------------------------------------------------------------------
+# Batches / caches / optimizer state
+# ----------------------------------------------------------------------
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def batch_specs(mesh: Mesh, batch_shape: Any) -> Any:
+    """Shard the leading batch axis over (pod, data) when divisible; pos3
+    carries batch at axis 1."""
+    da = _data_axes(mesh)
+    nd_ = _axes_size(mesh, da)
+
+    def spec(path, leaf):
+        name = getattr(path[-1], "key", None)
+        bax = 1 if name == "pos3" else 0
+        s = [None] * leaf.ndim
+        if leaf.shape[bax] % nd_ == 0:
+            s[bax] = da
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+def cache_specs(mesh: Mesh, cache_shape: Any, cfg: ArchConfig) -> Any:
+    """Decode-cache sharding.
+
+    Attention KV / MLA latent caches shard the SEQUENCE axis over ``model``
+    (sequence parallelism — always divisible at 32k/500k and the memory
+    dominator); SSM states shard heads / d_inner over ``model``; batch over
+    the data axes when divisible (long_500k has batch 1 -> replicated).
+    """
+    da = _data_axes(mesh)
+    nd_ = _axes_size(mesh, da)
+    nm = mesh.shape["model"]
+
+    # leaves are layer-stacked: (L|NP, B, ...)
+    SEQ_AXIS = {"k": 3, "v": 3, "ck": 3, "cv": 3, "c_kv": 2, "k_rope": 3}
+    # alternative layouts (cfg.cache_shard): heads -> kv-head axis;
+    # latent -> the trailing feature axis (MLA latent dim / head_dim)
+    HEAD_AXIS = {"k": 2, "v": 2, "ck": 2, "cv": 2}
+    FEAT_AXIS = {"k": 4, "v": 4, "ck": 4, "cv": 4, "c_kv": 3, "k_rope": 4}
+    MODEL_AXIS = {"s": 2, "cx": 3}                  # ssm heads / d_inner
+
+    def spec(path, leaf):
+        nd = leaf.ndim
+        name = getattr(path[-1], "key", None)
+        s = [None] * nd
+        if nd >= 2 and leaf.shape[1] % nd_ == 0:
+            s[1] = da
+        ax = MODEL_AXIS.get(name)
+        if ax is None:
+            mode = getattr(cfg, "cache_shard", "seq")
+            cand = {"seq": SEQ_AXIS, "heads": HEAD_AXIS,
+                    "latent": FEAT_AXIS}[mode].get(name)
+            ax = cand if (cand is not None and cand < nd
+                          and leaf.shape[cand] % nm == 0) else                 SEQ_AXIS.get(name)
+        if ax is not None and ax < nd and leaf.shape[ax] % nm == 0:
+            s[ax] = "model"
+        return P(*s)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)
+
+
+def opt_state_specs(mesh: Mesh, params_shape: Any) -> Any:
+    """ZeRO-1: take the param spec and additionally shard the first
+    evenly-divisible unsharded dim over the data axes."""
+    da = _data_axes(mesh)
+    n_data = int(np.prod([mesh.shape[a] for a in da]))
+    pspecs = param_specs(params_shape)
+
+    def zero1(leaf, spec):
+        dims = list(spec)
+        dims += [None] * (leaf.ndim - len(dims))
+        for i, (d, s) in enumerate(zip(leaf.shape, dims)):
+            if s is None and d % n_data == 0 and d >= n_data:
+                dims[i] = da
+                break
+        return P(*dims)
+
+    return jax.tree.map(zero1, params_shape, pspecs)
+
+
+def logical_out_specs(mesh: Mesh, kind: str) -> Any:
+    """Common output specs: scalar losses replicated; decode logits
+    sharded (batch over data, vocab over model)."""
+    if kind == "loss":
+        return P()
+    da = _data_axes(mesh)
+    return P(da, None, "model")

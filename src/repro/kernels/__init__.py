@@ -1,0 +1,8 @@
+"""repro.kernels - NTX streaming kernels for TPU (Pallas) + jnp oracles.
+
+``ops`` is the public facade used by the models; ``ref`` holds the oracles
+every kernel is validated against (interpret=True sweeps in tests/).
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

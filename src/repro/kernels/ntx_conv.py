@@ -1,0 +1,50 @@
+"""NTX direct 2-D convolution (paper §III-B2) as a Pallas kernel.
+
+The silicon runs conv as a 3-deep descriptor (kernel-col, kernel-row,
+out-col) while the RISC-V host iterates output rows / tiles. We keep the
+same split on TPU: the kernel computes a full strip of output rows from one
+VMEM-resident input strip with the kernel taps fully unrolled (they are the
+two innermost HWLs — static loops), accumulating in fp32 (PCS register);
+the ``ops`` wrapper plays the host's role, cutting large images into
+halo-overlapped strips.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _conv_kernel(img_ref, ker_ref, out_ref, *, kh: int, kw: int):
+    img = img_ref[...].astype(jnp.float32)      # (h, w)
+    h, w = img.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    acc = jnp.zeros((oh, ow), jnp.float32)
+    for i in range(kh):                          # HWL1: kernel row (unrolled)
+        for j in range(kw):                      # HWL0: kernel col (unrolled)
+            acc = acc + ker_ref[i, j] * jax.lax.dynamic_slice(
+                img, (i, j), (oh, ow))
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def conv2d_pallas(img: jnp.ndarray, ker: jnp.ndarray,
+                  interpret: bool = False) -> jnp.ndarray:
+    """Valid 2-D correlation of one (H, W) plane with (kh, kw) taps.
+
+    The strip must fit VMEM; ``ops.conv2d`` tiles larger planes.
+    """
+    h, w = img.shape
+    kh, kw = ker.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, kh=kh, kw=kw),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((h, w), lambda i: (0, 0)),
+                  pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_specs=pl.BlockSpec((oh, ow), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((oh, ow), jnp.float32),
+        interpret=interpret,
+    )(img, ker)

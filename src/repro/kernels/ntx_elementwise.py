@@ -1,0 +1,118 @@
+"""NTX streaming element commands as one Pallas kernel.
+
+Implements the non-reducing half of the paper's command set (Fig. 3b):
+AXPY / ADD / SUB / MUL / RELU / THRESH / MASK / COPY / SET — a descriptor
+with ``init_level = store_level = 0``: one element out per element in, so
+the Pallas grid is a flat stream of VMEM tiles (the TCDM double-buffer).
+
+Also provides the fused AdamW parameter update — the training-side use of
+the same machinery (an optimizer step IS an AXPY-family reduction bundle,
+which is how the original NTX paper accelerates training).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_OPS1 = {"relu", "thresh", "copy", "set"}
+_OPS2 = {"axpy", "add", "sub", "mul", "mask"}
+
+
+def _ew_kernel(*refs, op: str, imm: float):
+    if op in _OPS2:
+        x_ref, y_ref, o_ref = refs
+        x, y = x_ref[...], y_ref[...]
+    else:
+        x_ref, o_ref = refs
+        x, y = x_ref[...], None
+    imm = jnp.asarray(imm, x.dtype)
+    if op == "axpy":
+        o_ref[...] = imm * x + y
+    elif op == "add":
+        o_ref[...] = x + y
+    elif op == "sub":
+        o_ref[...] = x - y
+    elif op == "mul":
+        o_ref[...] = x * y
+    elif op == "mask":
+        o_ref[...] = jnp.where(y != 0, x, jnp.zeros_like(x))
+    elif op == "relu":
+        o_ref[...] = jnp.maximum(x, 0)
+    elif op == "thresh":
+        o_ref[...] = jnp.where(x > imm, x, jnp.zeros_like(x))
+    elif op == "copy":
+        o_ref[...] = x
+    elif op == "set":
+        o_ref[...] = jnp.full_like(x, imm)
+    else:
+        raise ValueError(op)
+
+
+def elementwise_pallas(op: str, x: jnp.ndarray, y: jnp.ndarray | None = None,
+                       imm: float = 0.0, block: int = 1024,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Apply one streaming command over a 2-D (rows, n) array.
+
+    ``repro.kernels.ops`` reshapes/pads arbitrary arrays into this layout
+    (rows % 8 == 0, n % 128 == 0 for TPU tiling; block divides n).
+    """
+    rows, n = x.shape
+    assert n % block == 0, (n, block)
+    grid = (n // block,)
+    spec = pl.BlockSpec((rows, block), lambda i: (0, i))
+    args = (x,) if op in _OPS1 else (x, y)
+    in_specs = [spec] * len(args)
+    return pl.pallas_call(
+        functools.partial(_ew_kernel, op=op, imm=imm),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(*args)
+
+
+# ----------------------------------------------------------------------
+# Fused AdamW step — the training workload the accelerator was built for
+# ----------------------------------------------------------------------
+def _adamw_kernel(p_ref, g_ref, m_ref, v_ref, bc_ref,
+                  po_ref, mo_ref, vo_ref, *, b1, b2, eps, wd, lr):
+    g = g_ref[...].astype(jnp.float32)
+    m = b1 * m_ref[...] + (1 - b1) * g
+    v = b2 * v_ref[...] + (1 - b2) * g * g
+    # bc_ref holds (1/(1-b1^t), 1/(1-b2^t)) broadcast scalars in SMEM
+    mhat = m * bc_ref[0]
+    vhat = v * bc_ref[1]
+    p = p_ref[...].astype(jnp.float32)
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    po_ref[...] = p.astype(po_ref.dtype)
+    mo_ref[...] = m
+    vo_ref[...] = v
+
+
+def adamw_pallas(p, g, m, v, step, *, lr, b1=0.9, b2=0.999, eps=1e-8,
+                 wd=0.01, block: int = 1024, interpret: bool = False):
+    """Fused AdamW over a 2-D (rows, n) parameter tile. Returns (p, m, v)."""
+    rows, n = p.shape
+    assert n % block == 0
+    bc = jnp.stack([1.0 / (1.0 - b1 ** step), 1.0 / (1.0 - b2 ** step)])
+    spec = pl.BlockSpec((rows, block), lambda i: (0, i))
+    return pl.pallas_call(
+        functools.partial(_adamw_kernel, b1=b1, b2=b2, eps=eps, wd=wd, lr=lr),
+        grid=(n // block,),
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_specs=(spec, spec, spec),
+        out_shape=(jax.ShapeDtypeStruct((rows, n), p.dtype),
+                   jax.ShapeDtypeStruct((rows, n), jnp.float32),
+                   jax.ShapeDtypeStruct((rows, n), jnp.float32)),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(p, g, m.astype(jnp.float32), v.astype(jnp.float32), bc)

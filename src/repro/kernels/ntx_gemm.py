@@ -1,0 +1,97 @@
+"""NTX streaming GEMM as a Pallas TPU kernel.
+
+The mapping from the paper's machine to this kernel is 1:1:
+
+  NTX hardware loops (outer levels)  ->  the Pallas ``grid`` (i, j, k)
+  AGU affine addressing              ->  ``BlockSpec.index_map``
+  TCDM tiles + DMA double buffering  ->  Pallas' automatic HBM->VMEM pipeline
+  PCS wide accumulator               ->  fp32 VMEM scratch accumulator,
+                                         written back (rounded) ONCE at the
+                                         last k-step (init_level/store_level
+                                         = the k loop, exactly like the
+                                         descriptor's init/store levels)
+
+``compensated=True`` additionally carries a Neumaier compensation term
+across k-blocks — the closest TPU analogue of the ~300-bit PCS register for
+fp32 inputs (bf16 inputs already get exact fp32 MXU accumulation per block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gemm_kernel(a_ref, b_ref, c_ref, acc_ref, *, nk: int, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():                       # descriptor init_level: fresh pass
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _store():                      # descriptor store_level: one rounding
+        c_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def _gemm_kernel_kahan(a_ref, b_ref, c_ref, acc_ref, comp_ref, *, nk: int,
+                       out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        comp_ref[...] = jnp.zeros_like(comp_ref)
+
+    x = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    acc = acc_ref[...]
+    t = acc + x
+    comp_ref[...] += jnp.where(jnp.abs(acc) >= jnp.abs(x),
+                               (acc - t) + x, (x - t) + acc)
+    acc_ref[...] = t
+
+    @pl.when(k == nk - 1)
+    def _store():
+        c_ref[...] = (acc_ref[...] + comp_ref[...]).astype(out_dtype)
+
+
+def gemm_pallas(a: jnp.ndarray, b: jnp.ndarray, *,
+                block_m: int = 128, block_n: int = 128, block_k: int = 128,
+                out_dtype=jnp.float32, compensated: bool = False,
+                interpret: bool = False) -> jnp.ndarray:
+    """C[m,n] = A[m,k] @ B[k,n]. Dims must divide the block sizes
+    (``repro.kernels.ops.gemm`` pads arbitrary shapes)."""
+    m, kdim = a.shape
+    k2, n = b.shape
+    assert kdim == k2, (a.shape, b.shape)
+    assert m % block_m == 0 and n % block_n == 0 and kdim % block_k == 0, (
+        (m, n, kdim), (block_m, block_n, block_k))
+    nk = kdim // block_k
+    grid = (m // block_m, n // block_n, nk)
+
+    kern = _gemm_kernel_kahan if compensated else _gemm_kernel
+    scratch = [pltpu.VMEM((block_m, block_n), jnp.float32)]
+    if compensated:
+        scratch.append(pltpu.VMEM((block_m, block_n), jnp.float32))
+
+    return pl.pallas_call(
+        functools.partial(kern, nk=nk, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),  # AGU0
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),  # AGU1
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),  # AGU2
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=scratch,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,80 @@
+"""NTX streaming reductions (SUM / MIN / MAX / ARGMIN / ARGMAX) in Pallas.
+
+The reducing half of the command set: a descriptor whose ``init_level``
+covers the streamed axis. The Pallas grid's last dimension walks the
+reduction axis in VMEM-sized tiles; the running accumulator (and the index
+counter for the arg ops — the paper's comparator + index-counter datapath)
+lives in VMEM scratch across grid steps, with a single write-back at the
+last step (deferred rounding, as in the PCS datapath).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_INIT = {"sum": 0.0, "min": float("inf"), "max": float("-inf"),
+         "argmin": float("inf"), "argmax": float("-inf")}
+
+
+def _reduce_kernel(x_ref, o_ref, acc_ref, idx_ref, *, op: str, nk: int,
+                   block: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, _INIT[op])
+        if op in ("argmin", "argmax"):
+            idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (rows, block)
+    if op == "sum":
+        acc_ref[...] += x.sum(-1, keepdims=True)
+    elif op == "min":
+        acc_ref[...] = jnp.minimum(acc_ref[...], x.min(-1, keepdims=True))
+    elif op == "max":
+        acc_ref[...] = jnp.maximum(acc_ref[...], x.max(-1, keepdims=True))
+    else:
+        # comparator + index counter: local arg, then global first-wins merge
+        local = (jnp.argmin(x, -1) if op == "argmin"
+                 else jnp.argmax(x, -1)).astype(jnp.int32)[:, None]
+        val = (x.min(-1, keepdims=True) if op == "argmin"
+               else x.max(-1, keepdims=True))
+        better = (val < acc_ref[...]) if op == "argmin" else (val > acc_ref[...])
+        idx_ref[...] = jnp.where(better, local + k * block, idx_ref[...])
+        acc_ref[...] = jnp.where(better, val, acc_ref[...])
+
+    @pl.when(k == nk - 1)
+    def _store():
+        if op in ("argmin", "argmax"):
+            o_ref[...] = idx_ref[...].astype(o_ref.dtype)
+        else:
+            o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def reduce_pallas(op: str, x: jnp.ndarray, block: int = 512,
+                  interpret: bool = False) -> jnp.ndarray:
+    """Reduce (rows, n) over the last axis -> (rows, 1).
+
+    ``n % block == 0`` required (ops.py pads with the op identity).
+    """
+    rows, n = x.shape
+    assert n % block == 0, (n, block)
+    nk = n // block
+    out_dtype = jnp.int32 if op in ("argmin", "argmax") else jnp.float32
+    out = pl.pallas_call(
+        functools.partial(_reduce_kernel, op=op, nk=nk, block=block),
+        grid=(1, nk),
+        in_specs=[pl.BlockSpec((rows, block), lambda r, k: (r, k))],
+        out_specs=pl.BlockSpec((rows, 1), lambda r, k: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, 1), out_dtype),
+        scratch_shapes=[pltpu.VMEM((rows, 1), jnp.float32),
+                        pltpu.VMEM((rows, 1), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x)
+    return out[:, 0]

@@ -1,0 +1,45 @@
+"""NTX stencil kernels (paper §III-B3): star stencils via per-axis passes.
+
+The paper exploits that star-shaped stencils decompose into per-dimension
+1-D stencils ("its star shaped access pattern allows it to be computed
+efficiently on NTX by decomposing the kernel into its separate dimensions").
+We implement exactly that: a Pallas 1-D multi-tap pass along the last axis
+(taps unrolled, fp32 accumulate), and the wrapper applies it per axis via
+transposes, summing the passes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _stencil_kernel(x_ref, coef_ref, o_ref, *, k: int):
+    x = x_ref[...].astype(jnp.float32)          # (rows, n)
+    rows, n = x.shape
+    on = n - k + 1
+    acc = jnp.zeros((rows, on), jnp.float32)
+    for j in range(k):                           # taps = innermost HWL
+        acc = acc + coef_ref[j] * jax.lax.dynamic_slice(x, (0, j), (rows, on))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def stencil1d_pallas(x: jnp.ndarray, coeffs: jnp.ndarray,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Valid 1-D stencil along the last axis of a (rows, n) array."""
+    rows, n = x.shape
+    k = coeffs.shape[0]
+    on = n - k + 1
+    return pl.pallas_call(
+        functools.partial(_stencil_kernel, k=k),
+        grid=(1,),
+        in_specs=[pl.BlockSpec((rows, n), lambda i: (0, 0)),
+                  pl.BlockSpec(memory_space=pltpu.SMEM)],
+        out_specs=pl.BlockSpec((rows, on), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, on), jnp.float32),
+        interpret=interpret,
+    )(x, coeffs)

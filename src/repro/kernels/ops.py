@@ -1,0 +1,255 @@
+"""Public jit'd wrappers around the NTX Pallas kernels.
+
+Backend selection (process-wide):
+  * ``"ref"``              pure-jnp oracles (default — also what the models
+                           use for the CPU 512-device dry-run, where Mosaic
+                           TPU kernels cannot lower)
+  * ``"pallas_interpret"`` Pallas kernels, interpret mode (CPU validation)
+  * ``"pallas"``           Pallas kernels, compiled (real TPU)
+
+Wrappers own all padding/reshaping so kernels can assume aligned shapes.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .ntx_gemm import gemm_pallas
+from .ntx_elementwise import elementwise_pallas, adamw_pallas
+from .ntx_reduce import reduce_pallas
+from .ntx_conv import conv2d_pallas
+from .ntx_stencil import stencil1d_pallas
+from .flash_attention import flash_attention_pallas
+from .ssd_scan import ssd_scan_pallas
+
+_BACKEND = "ref"
+_VALID = ("ref", "pallas_interpret", "pallas")
+
+
+def set_backend(name: str) -> None:
+    global _BACKEND
+    if name not in _VALID:
+        raise ValueError(f"backend must be one of {_VALID}")
+    _BACKEND = name
+
+
+def get_backend() -> str:
+    return _BACKEND
+
+
+@contextlib.contextmanager
+def backend(name: str):
+    prev = get_backend()
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)
+
+
+def _pallas() -> bool:
+    return _BACKEND != "ref"
+
+
+def _interp() -> bool:
+    return _BACKEND == "pallas_interpret"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value), n
+
+
+# ----------------------------------------------------------------------
+# GEMM
+# ----------------------------------------------------------------------
+def gemm(a: jnp.ndarray, b: jnp.ndarray, out_dtype=jnp.float32,
+         compensated: bool = False) -> jnp.ndarray:
+    """C = A @ B, fp32 accumulate, arbitrary shapes."""
+    if not _pallas():
+        return ref.gemm(a, b, out_dtype)
+    m, k = a.shape
+    _, n = b.shape
+    bm = 128 if m >= 128 else 8 * max(1, (m + 7) // 8)
+    bn = 128 if n >= 128 else 128
+    bk = 128 if k >= 128 else 128
+    a2, m0 = _pad_to(a, 0, bm)
+    a2, k0 = _pad_to(a2, 1, bk)
+    b2, _ = _pad_to(b, 0, bk)
+    b2, n0 = _pad_to(b2, 1, bn)
+    c = gemm_pallas(a2, b2, block_m=bm, block_n=bn, block_k=bk,
+                    out_dtype=out_dtype, compensated=compensated,
+                    interpret=_interp())
+    return c[:m0, :n0]
+
+
+# ----------------------------------------------------------------------
+# Elementwise command set
+# ----------------------------------------------------------------------
+def elementwise(op: str, x: jnp.ndarray, y: jnp.ndarray | None = None,
+                imm: float = 0.0) -> jnp.ndarray:
+    if not _pallas():
+        return ref.elementwise(op, x, y, imm)
+    shape = x.shape
+    flat = x.reshape(1, -1)
+    yf = y.reshape(1, -1) if y is not None else None
+    block = 1024 if flat.shape[1] >= 1024 else 128
+    xf, n0 = _pad_to(flat, 1, block)
+    if yf is not None:
+        yf, _ = _pad_to(yf, 1, block)
+    out = elementwise_pallas(op, xf, yf, imm=imm, block=block,
+                             interpret=_interp())
+    return out[:, :n0].reshape(shape)
+
+
+def axpy(a: float, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return elementwise("axpy", x, y, imm=a)
+
+
+# ----------------------------------------------------------------------
+# Reductions
+# ----------------------------------------------------------------------
+_PAD_VALUE = {"sum": 0.0, "min": np.inf, "max": -np.inf,
+              "argmin": np.inf, "argmax": -np.inf}
+
+
+def reduce(op: str, x: jnp.ndarray) -> jnp.ndarray:
+    """Reduce over the last axis of (rows, n)."""
+    if not _pallas():
+        return ref.reduce(op, x)
+    block = 512 if x.shape[-1] >= 512 else 128
+    xp, _ = _pad_to(x, 1, block, value=_PAD_VALUE[op])
+    return reduce_pallas(op, xp, block=block, interpret=_interp())
+
+
+# ----------------------------------------------------------------------
+# Convolution (host tiles strips like the RISC-V does in the paper)
+# ----------------------------------------------------------------------
+def conv2d(img: jnp.ndarray, ker: jnp.ndarray,
+           strip_rows: int = 256) -> jnp.ndarray:
+    if not _pallas():
+        return ref.conv2d(img, ker)
+    h, w = img.shape
+    kh, kw = ker.shape
+    oh = h - kh + 1
+    outs = []
+    r = 0
+    while r < oh:
+        rows = min(strip_rows, oh - r)
+        strip = jax.lax.dynamic_slice(img, (r, 0), (rows + kh - 1, w))
+        outs.append(conv2d_pallas(strip, ker, interpret=_interp()))
+        r += rows
+    return jnp.concatenate(outs, 0)
+
+
+# ----------------------------------------------------------------------
+# Stencils
+# ----------------------------------------------------------------------
+def stencil_axis(x: jnp.ndarray, coeffs: jnp.ndarray, axis: int) -> jnp.ndarray:
+    if not _pallas():
+        return ref.stencil_axis(x, list(np.asarray(coeffs)), axis)
+    x2 = jnp.moveaxis(x, axis, -1)
+    lead = x2.shape[:-1]
+    rows = int(np.prod(lead)) if lead else 1
+    out = stencil1d_pallas(x2.reshape(rows, x2.shape[-1]),
+                           jnp.asarray(coeffs, jnp.float32),
+                           interpret=_interp())
+    out = out.reshape(*lead, out.shape[-1])
+    return jnp.moveaxis(out, -1, axis)
+
+
+def laplace(x: jnp.ndarray) -> jnp.ndarray:
+    """n-D discrete Laplace via per-axis passes (paper's decomposition)."""
+    if not _pallas():
+        return ref.laplace(x)
+    nd = x.ndim
+    coeffs = jnp.asarray([1.0, -2.0, 1.0], jnp.float32)
+    core = tuple(slice(1, -1) for _ in range(nd))
+    out = None
+    for d in range(nd):
+        sl = [slice(1, -1)] * nd
+        sl[d] = slice(None)
+        term = stencil_axis(x[tuple(sl)], coeffs, d)
+        out = term if out is None else out + term
+    return out
+
+
+# ----------------------------------------------------------------------
+# Attention
+# ----------------------------------------------------------------------
+def attention(q, k, v, *, causal: bool = True, scale=None,
+              kv_len: int | None = None) -> jnp.ndarray:
+    """q: (b, hq, sq, d); k/v: (b, hkv, skv, d)."""
+    if not _pallas() or q.shape[-1] != v.shape[-1]:
+        skv = k.shape[2]
+        eff = skv if kv_len is None else kv_len
+        # causal masking with q at absolute position eff - sq + i also hides
+        # cache slots >= kv_len; non-causal callers pass full-length kv.
+        q_offset = eff - q.shape[2]
+        if q.shape[2] >= 512 and skv >= 2048 and skv % 512 == 0 and causal:
+            # KV-blocked online softmax: O(sq*block) memory (flash pattern
+            # at the XLA level) — required for the 32k train/prefill cells.
+            # Decode (sq ~ 1) keeps the direct form: its logits are tiny and
+            # the kv-block scan would fight the seq-sharded cache layout.
+            return ref.mha_blocked(q, k, v, causal=True, scale=scale,
+                                   q_offset=q_offset)
+        return ref.mha(q, k, v, causal=causal, scale=scale,
+                       q_offset=q_offset)
+    sq = q.shape[2]
+    bq = min(128, sq) if sq >= 8 else sq
+    return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                  kv_len=kv_len, block_q=bq,
+                                  block_k=min(128, k.shape[2]),
+                                  interpret=_interp())
+
+
+# ----------------------------------------------------------------------
+# SSD scan
+# ----------------------------------------------------------------------
+def ssd(x, dt, A, B, C, chunk: int = 64,
+        work_dtype=jnp.float32) -> jnp.ndarray:
+    """x: (b, l, h, dh); dt: (b, l, h); A: (h,); B/C: (b, l, n)."""
+    if not _pallas():
+        return ref.ssd_scan_chunked(x, dt, A, B, C, chunk=chunk,
+                                    work_dtype=work_dtype) \
+            if x.shape[1] % chunk == 0 else ref.ssd_scan(x, dt, A, B, C)
+    b, l, h, dh = x.shape
+    n = B.shape[-1]
+    xs = jnp.moveaxis(x, 2, 1).reshape(b * h, l, dh)
+    dts = jnp.moveaxis(dt, 2, 1).reshape(b * h, l)
+    Bs = jnp.broadcast_to(B[:, None], (b, h, l, n)).reshape(b * h, l, n)
+    Cs = jnp.broadcast_to(C[:, None], (b, h, l, n)).reshape(b * h, l, n)
+    As = jnp.broadcast_to(A[None], (b, h)).reshape(b * h)
+    y = ssd_scan_pallas(xs, dts, As, Bs, Cs, chunk=chunk, interpret=_interp())
+    return jnp.moveaxis(y.reshape(b, h, l, dh), 1, 2)
+
+
+# ----------------------------------------------------------------------
+# Fused optimizer
+# ----------------------------------------------------------------------
+def adamw_update(p, g, m, v, step, *, lr, b1=0.9, b2=0.999, eps=1e-8,
+                 wd=0.01):
+    if not _pallas():
+        return ref.adamw_update(p, g, m, v, step, lr, b1, b2, eps, wd)
+    shape = p.shape
+    flat = lambda t: t.reshape(1, -1)
+    block = 1024 if p.size >= 1024 else 128
+    pf, n0 = _pad_to(flat(p), 1, block)
+    gf, _ = _pad_to(flat(g), 1, block)
+    mf, _ = _pad_to(flat(m), 1, block)
+    vf, _ = _pad_to(flat(v), 1, block)
+    po, mo, vo = adamw_pallas(pf, gf, mf, vf, step, lr=lr, b1=b1, b2=b2,
+                              eps=eps, wd=wd, block=block,
+                              interpret=_interp())
+    unflat = lambda t: t[:, :n0].reshape(shape)
+    return unflat(po), unflat(mo), unflat(vo)

@@ -1,0 +1,439 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret=True
+on CPU, shape/dtype sweeps in tests/). They are also the execution path used
+by the models on backends where Mosaic kernels cannot lower (the CPU
+dry-run) — same math, no custom tiling.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ----------------------------------------------------------------------
+# GEMM / BLAS
+# ----------------------------------------------------------------------
+def gemm(a: jnp.ndarray, b: jnp.ndarray,
+         out_dtype=jnp.float32) -> jnp.ndarray:
+    """C = A @ B with fp32 accumulation (PCS-style: round once at the end)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def axpy(a: float, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    return a * x + y
+
+
+def elementwise(op: str, x: jnp.ndarray, y: jnp.ndarray | None = None,
+                imm: float = 0.0) -> jnp.ndarray:
+    if op == "axpy":
+        return imm * x + y
+    if op == "add":
+        return x + y
+    if op == "sub":
+        return x - y
+    if op == "mul":
+        return x * y
+    if op == "relu":
+        return jnp.maximum(x, 0)
+    if op == "thresh":
+        return jnp.where(x > imm, x, 0)
+    if op == "mask":
+        return jnp.where(y != 0, x, 0)
+    if op == "copy":
+        return x
+    if op == "set":
+        return jnp.full_like(x, imm)
+    raise ValueError(op)
+
+
+def reduce(op: str, x: jnp.ndarray) -> jnp.ndarray:
+    """Reduce over the last axis. x: (rows, n)."""
+    if op == "sum":
+        return x.sum(-1)
+    if op == "min":
+        return x.min(-1)
+    if op == "max":
+        return x.max(-1)
+    if op == "argmin":
+        return jnp.argmin(x, -1).astype(jnp.int32)
+    if op == "argmax":
+        return jnp.argmax(x, -1).astype(jnp.int32)
+    raise ValueError(op)
+
+
+# ----------------------------------------------------------------------
+# Convolution (paper §III-B2): valid 2-D, single channel plane
+# ----------------------------------------------------------------------
+def conv2d(img: jnp.ndarray, ker: jnp.ndarray) -> jnp.ndarray:
+    """Valid correlation of (H, W) with (kh, kw) — the NTX conv command."""
+    kh, kw = ker.shape
+    h, w = img.shape
+    out = jnp.zeros((h - kh + 1, w - kw + 1), jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            out = out + ker[i, j] * img[i:i + h - kh + 1, j:j + w - kw + 1]
+    return out
+
+
+# ----------------------------------------------------------------------
+# Stencils (paper §III-B3)
+# ----------------------------------------------------------------------
+def stencil_axis(x: jnp.ndarray, coeffs: Sequence[float], axis: int) -> jnp.ndarray:
+    """1-D stencil along ``axis`` (valid region), len(coeffs) taps."""
+    k = len(coeffs)
+    n = x.shape[axis]
+    out = None
+    for i, c in enumerate(coeffs):
+        sl = [slice(None)] * x.ndim
+        sl[axis] = slice(i, i + n - k + 1)
+        term = c * x[tuple(sl)]
+        out = term if out is None else out + term
+    return out
+
+
+def laplace(x: jnp.ndarray) -> jnp.ndarray:
+    """Discrete Laplace operator in ndim dims (3/5/7-point star stencil).
+
+    Star stencils decompose into per-dimension 1-D stencils (how NTX executes
+    them): interior(out) = sum_d (x[+1_d] - 2x + x[-1_d]).
+    """
+    nd = x.ndim
+    core = [slice(1, -1)] * nd
+    out = jnp.zeros(x[tuple(core)].shape, jnp.float32)
+    for d in range(nd):
+        sl_p = list(core)
+        sl_m = list(core)
+        sl_p[d] = slice(2, None)
+        sl_m[d] = slice(0, -2)
+        out = out + x[tuple(sl_p)] + x[tuple(sl_m)]
+    out = out - 2.0 * nd * x[tuple(core)]
+    return out
+
+
+def diffusion(x: jnp.ndarray, alpha: float = 0.1) -> jnp.ndarray:
+    """The 13-coefficient 2nd-order diffusion stencil of Gysi et al. [16].
+
+    Decomposed as the paper describes (§III-B3) into a 9-point 3x3 kernel
+    plus two 2-coefficient 1-D passes. out = x + alpha * L2(x) on the valid
+    interior, where L2 is a 4th-order Laplacian-of-Laplacian-flavoured star.
+    """
+    # 3x3 nine-point core
+    k9 = jnp.array([[1., 2., 1.], [2., -12., 2.], [1., 2., 1.]], jnp.float32)
+    inner = conv2d(x, k9)
+    # two extra axis taps at distance 2 (the 2+2 coefficients)
+    h, w = x.shape
+    core = x[2:-2, 2:-2]
+    t_v = x[:-4, 2:-2] + x[4:, 2:-2]
+    t_h = x[2:-2, :-4] + x[2:-2, 4:]
+    return core + alpha * (inner[1:-1, 1:-1] + t_v + t_h)
+
+
+# ----------------------------------------------------------------------
+# Attention — online-softmax streaming reduction (NTX MAX+MAC class)
+# ----------------------------------------------------------------------
+def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, causal: bool = True,
+        scale: float | None = None, q_offset: int = 0) -> jnp.ndarray:
+    """Reference attention. q: (b, hq, sq, d); k/v: (b, hkv, skv, d).
+
+    GQA: hq must be a multiple of hkv. ``q_offset`` positions the query block
+    inside the kv sequence for causal masking (decode: q_offset = cache_len).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    # grouped einsum: no materialised head-repeat of K/V (GQA/cache friendly)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg,
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        skv = k.shape[2]
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(skv)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, v.shape[-1]).astype(q.dtype)
+
+
+def mha_blocked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                causal: bool = True, scale: float | None = None,
+                q_offset: int = 0, block_k: int = 512) -> jnp.ndarray:
+    """Online-softmax attention in pure jnp: lax.scan over KV blocks with a
+    running (max, sum, acc) accumulator — the flash/NTX MAX+MAC reduction
+    expressed at the XLA level. O(sq * block_k) memory instead of O(sq*skv),
+    GQA without materialising repeated heads, and a flash-style custom VJP
+    (backward recomputes p per block from the saved logsumexp instead of
+    letting scan-vjp store the online-softmax carries every step — the
+    standard trick, without which training memory is O(nk * sq * d)).
+
+    q: (b, hq, sq, d); k/v: (b, hkv, skv, d). skv % block_k == 0.
+    """
+    scale = (q.shape[-1] ** -0.5) if scale is None else scale
+    return _mha_blocked(q, k, v, causal, float(scale), q_offset, block_k)
+
+
+import functools as _ft
+
+
+@_ft.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _mha_blocked(q, k, v, causal, scale, q_offset, block_k):
+    out, _ = _mha_blocked_fwd(q, k, v, causal, scale, q_offset, block_k)
+    return out
+
+
+def _blocked_kv(k, block_k):
+    b, hkv, skv, d = k.shape
+    nk = skv // block_k
+    return k.reshape(b, hkv, nk, block_k, d).transpose(2, 0, 1, 3, 4)
+
+
+def _mha_blocked_fwd(q, k, v, causal, scale, q_offset, block_k):
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    assert skv % block_k == 0, (skv, block_k)
+    nk = skv // block_k
+
+    dv = v.shape[-1]
+    qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32) * scale
+    kb, vb = _blocked_kv(k, block_k), _blocked_kv(v, block_k)
+    qpos = jnp.arange(sq) + q_offset
+
+    def step(carry, inp):
+        m, l, acc = carry
+        ik, kc, vc = inp
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kc.astype(jnp.float32))
+        if causal:
+            kpos = ik * block_k + jnp.arange(block_k)
+            mask = kpos[None, :] <= qpos[:, None]
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        corr = jnp.exp(m - m_new)
+        l = corr * l + p.sum(-1, keepdims=True)
+        acc = corr * acc + jnp.einsum("bhgqk,bhkd->bhgqd", p,
+                                      vc.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (jnp.arange(nk), kb, vb))
+    out = (acc / jnp.where(l == 0.0, 1.0, l)).reshape(b, hq, sq, dv)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))            # (b,hkv,g,sq,1)
+    return out.astype(q.dtype), (q, k, v, out.astype(q.dtype), lse)
+
+
+def _mha_blocked_bwd(causal, scale, q_offset, block_k, res, dout):
+    q, k, v, out, lse = res
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    dv = v.shape[-1]
+    g = hq // hkv
+    nk = skv // block_k
+
+    qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    og = out.reshape(b, hkv, g, sq, dv).astype(jnp.float32)
+    dog = dout.reshape(b, hkv, g, sq, dv).astype(jnp.float32)
+    D = (dog * og).sum(-1, keepdims=True)               # (b,hkv,g,sq,1)
+    kb, vb = _blocked_kv(k, block_k), _blocked_kv(v, block_k)
+    qpos = jnp.arange(sq) + q_offset
+
+    def step(dq, inp):
+        ik, kc, vc = inp
+        kc = kc.astype(jnp.float32)
+        vc = vc.astype(jnp.float32)
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kc) * scale
+        if causal:
+            kpos = ik * block_k + jnp.arange(block_k)
+            mask = kpos[None, :] <= qpos[:, None]
+            logits = jnp.where(mask[None, None, None], logits, -1e30)
+        p = jnp.exp(logits - lse)                        # (b,hkv,g,sq,bk)
+        dv = jnp.einsum("bhgqk,bhgqd->bhkd", p, dog)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", dog, vc)
+        ds = p * (dp - D) * scale
+        dq = dq + jnp.einsum("bhgqk,bhkd->bhgqd", ds, kc)
+        dk = jnp.einsum("bhgqk,bhgqd->bhkd", ds, qg)
+        return dq, (dk, dv)
+
+    dq0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(step, dq0, (jnp.arange(nk), kb, vb))
+    dk = dks.transpose(1, 2, 0, 3, 4).reshape(b, hkv, skv, d)
+    dv = dvs.transpose(1, 2, 0, 3, 4).reshape(b, hkv, skv, dv)
+    return (dq.reshape(b, hq, sq, d).astype(q.dtype),
+            dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+_mha_blocked.defvjp(_mha_blocked_fwd, _mha_blocked_bwd)
+
+
+# ----------------------------------------------------------------------
+# Mamba-2 SSD — sequential oracle (the chunked kernel must match this)
+# ----------------------------------------------------------------------
+def ssd_scan(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+             B: jnp.ndarray, C: jnp.ndarray) -> jnp.ndarray:
+    """Sequential state-space scan.
+
+    x:  (b, l, h, dh)   inputs per head
+    dt: (b, l, h)       softplus-ed timestep (>0)
+    A:  (h,)            negative scalar decay per head (Mamba-2: scalar A)
+    B:  (b, l, n)       input projection (shared across heads)
+    C:  (b, l, n)       output projection
+    returns y: (b, l, h, dh)
+
+      h_t = exp(dt_t * A) * h_{t-1} + dt_t * B_t  (outer) x_t
+      y_t = C_t . h_t
+    """
+    bsz, l, h, dh = x.shape
+    n = B.shape[-1]
+
+    def scan_one(carry, inp):
+        s = carry                       # (h, n, dh)
+        xt, dtt, Bt, Ct = inp           # (h,dh), (h,), (n,), (n,)
+        decay = jnp.exp(dtt * A)        # (h,)
+        upd = (dtt[:, None] * xt)       # (h, dh)
+        s = decay[:, None, None] * s + Bt[None, :, None] * upd[:, None, :]
+        y = jnp.einsum("n,hnd->hd", Ct, s)
+        return s, y
+
+    def per_batch(xb, dtb, Bb, Cb):
+        s0 = jnp.zeros((h, n, dh), jnp.float32)
+        _, ys = jax.lax.scan(scan_one, s0,
+                             (xb.astype(jnp.float32), dtb.astype(jnp.float32),
+                              Bb.astype(jnp.float32), Cb.astype(jnp.float32)))
+        return ys
+
+    y = jax.vmap(per_batch)(x, dt, B, C)
+    return y.astype(x.dtype)
+
+
+def ssd_scan_chunked(x, dt, A, B, C, chunk: int = 64,
+                     work_dtype=jnp.float32):
+    """Chunked (SSD 'state-space duality') form in pure jnp.
+
+    Mathematically identical to ssd_scan; this is the blocked algorithm the
+    Pallas kernel implements: intra-chunk quadratic part + inter-chunk
+    carried state (the NTX chunk-granular wide accumulator). ``work_dtype``
+    controls the big intra-chunk tensors (bf16 in the production models;
+    decay/cumsum/state math stays fp32 — the PCS discipline).
+    """
+    bsz, l, h, dh = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0
+    nc = l // chunk
+    xc = x.reshape(bsz, nc, chunk, h, dh).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    Cc = C.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+
+    # log-decay within each chunk: l_t = cumsum(dt*A) inclusive
+    la = jnp.cumsum(dtc * A[None, None, None, :], axis=2)  # (b,nc,L,h)
+
+    # intra-chunk: Y[t] = sum_{s<=t} exp(l_t - l_s) dt_s (C_t.B_s) x_s
+    # mask s<=t
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32))
+    cb = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)             # (b,nc,L,L)
+    dec = jnp.exp(la[:, :, :, None, :] - la[:, :, None, :, :])  # (b,nc,t,s,h)
+    w = (cb[..., None] * dec * tri[None, None, :, :, None]).astype(work_dtype)
+    y_intra = jnp.einsum("btsh,bshd->bthd",
+                         w.reshape(-1, chunk, chunk, h),
+                         (dtc[..., None] * xc).astype(work_dtype)
+                         .reshape(-1, chunk, h, dh),
+                         preferred_element_type=jnp.float32)
+    y_intra = y_intra.reshape(bsz, nc, chunk, h, dh)
+
+    # chunk states: S_c = exp(l_L) S_{c-1} + sum_s exp(l_L - l_s) dt_s B_s x_s
+    l_last = la[:, :, -1, :]                               # (b,nc,h)
+    wS = jnp.exp(l_last[:, :, None, :] - la) * dtc         # (b,nc,L,h)
+    S_in = jnp.einsum("bcsn,bcsh,bcshd->bchnd", Bc.astype(work_dtype),
+                      wS.astype(work_dtype), xc.astype(work_dtype),
+                      preferred_element_type=jnp.float32)  # (b,nc,h,n,dh)
+
+    def chunk_scan(s, inp):
+        s_in, dec_c = inp
+        s_new = dec_c[:, None, None] * s + s_in
+        return s_new, s
+
+    def per_batch(S_in_b, dec_b):
+        s0 = jnp.zeros((h, n, dh), jnp.float32)
+        _, s_prevs = jax.lax.scan(chunk_scan, s0, (S_in_b, dec_b))
+        return s_prevs                                      # state BEFORE chunk c
+
+    s_prev = jax.vmap(per_batch)(S_in, jnp.exp(l_last))     # (b,nc,h,n,dh)
+
+    # inter-chunk: Y[t] += C_t exp(l_t) S_prev
+    y_inter = jnp.einsum("bctn,bcth,bchnd->bcthd", Cc, jnp.exp(la), s_prev)
+    y = (y_intra + y_inter).reshape(bsz, l, h, dh)
+    return y.astype(x.dtype)
+
+
+def _unused():
+    pass
+
+
+def ssd_scan_chunked_with_state(x, dt, A, B, C, chunk: int = 64):
+    """Like ssd_scan_chunked but also returns the final recurrent state
+    (b, h, n, dh) — used by prefill to hand the cache to decode."""
+    bsz, l, h, dh = x.shape
+    n = B.shape[-1]
+    if l % chunk:
+        # fall back: sequential scan that tracks state
+        def scan_one(carry, inp):
+            s = carry
+            xt, dtt, Bt, Ct = inp
+            decay = jnp.exp(dtt * A)
+            s = decay[:, None, None] * s + Bt[None, :, None] * \
+                (dtt[:, None] * xt)[:, None, :]
+            return s, jnp.einsum("n,hnd->hd", Ct, s)
+
+        def per_batch(xb, dtb, Bb, Cb):
+            s0 = jnp.zeros((h, n, dh), jnp.float32)
+            sT, ys = jax.lax.scan(scan_one, s0,
+                                  (xb.astype(jnp.float32),
+                                   dtb.astype(jnp.float32),
+                                   Bb.astype(jnp.float32),
+                                   Cb.astype(jnp.float32)))
+            return ys, sT
+        y, sT = jax.vmap(per_batch)(x, dt, B, C)
+        return y.astype(x.dtype), sT
+
+    y = ssd_scan_chunked(x, dt, A, B, C, chunk=chunk)
+    # recompute the final state from the last-chunk quantities
+    nc = l // chunk
+    xc = x.reshape(bsz, nc, chunk, h, dh).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    la = jnp.cumsum(dtc * A[None, None, None, :], axis=2)
+    l_last = la[:, :, -1, :]
+    wS = jnp.exp(l_last[:, :, None, :] - la) * dtc
+    S_in = jnp.einsum("bcsn,bcsh,bcshd->bchnd", Bc, wS, xc)
+
+    def chunk_scan(s, inp):
+        s_in, dec_c = inp
+        return dec_c[:, None, None] * s + s_in, None
+
+    def per_batch(S_in_b, dec_b):
+        s0 = jnp.zeros((h, n, dh), jnp.float32)
+        sT, _ = jax.lax.scan(chunk_scan, s0, (S_in_b, dec_b))
+        return sT
+
+    sT = jax.vmap(per_batch)(S_in, jnp.exp(l_last))
+    return y, sT
+
+
+# ----------------------------------------------------------------------
+# Fused optimizer update (AdamW) — NTX elementwise-command composition
+# ----------------------------------------------------------------------
+def adamw_update(p, g, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8, wd=0.01):
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mhat = m / (1 - b1 ** step)
+    vhat = v / (1 - b2 ** step)
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    return p, m, v

@@ -1,0 +1,359 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("DRYRUN_EXTRA_XLA", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this script:
+  1. builds the step function (train_step / prefill_step / serve_step),
+  2. jits it with the production in/out shardings,
+  3. ``.lower(**ShapeDtypeStructs).compile()`` — no device allocation,
+  4. records ``memory_analysis()`` (fits-per-device proof),
+     ``cost_analysis()`` (FLOPs/bytes) and the collective schedule parsed
+     from the compiled HLO (op kind, bytes, group size -> wire bytes),
+  5. writes one JSON per cell into --out.
+
+Because XLA's cost analysis counts a while/scan body ONCE regardless of
+trip count, FLOPs/bytes/collectives are additionally measured with the
+delta method: compile unrolled 1-period and 2-period variants and report
+total = F1 + (n_periods - 1) * (F2 - F1), exact for our periodic layer
+stacks. memory_analysis always comes from the production scanned variant.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k \
+      --mesh single --out results/dryrun
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Any, Dict
+
+import numpy as np
+
+
+def _build_step(cfg, shape_name: str, mesh, overrides: Dict[str, Any]):
+    """Returns (fn, args_shapedtypes, in_shardings, out_shardings)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import configs
+    from repro.configs.shapes import SHAPES, batch_specs, cache_specs
+    from repro.distributed import sharding as shd
+    from repro.models import Model
+    from repro.optim import AdamWConfig
+
+    cfg = cfg.scaled(**overrides) if overrides else cfg
+    model = Model(cfg)
+    sh = SHAPES[shape_name]
+    b, s = sh.global_batch, sh.seq_len
+
+    from repro.models.common import set_activation_sharding
+    da = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    set_activation_sharding(mesh, da, "model")
+
+    params_shape = jax.eval_shape(lambda: model.init(0))
+    pshard = shd.param_shardings(
+        mesh, params_shape,
+        replicate_attn=cfg.ctx_parallel and cfg.ctx_replicate_weights)
+    ns = lambda spec: NamedSharding(mesh, spec)
+
+    if sh.kind == "train":
+        opt_cfg = AdamWConfig()
+        bspecs = batch_specs(cfg, b, s)
+        bshard = jax.tree.map(ns, shd.batch_specs(mesh, bspecs))
+        opt_shape = jax.eval_shape(
+            lambda: {"master": params_shape, "m": params_shape,
+                     "v": params_shape, "step": jnp.zeros((), jnp.int32)})
+        ospec = shd.opt_state_specs(mesh, params_shape)
+        oshard = {"master": jax.tree.map(ns, ospec),
+                  "m": jax.tree.map(ns, ospec),
+                  "v": jax.tree.map(ns, ospec), "step": ns(P())}
+
+        from repro.runtime.train import build_step_fn
+        gacc_sh = jax.tree.map(ns, ospec)
+        raw = build_step_fn(cfg, opt_cfg, gacc_shardings=gacc_sh)
+
+        def step(params, opt_state, batch):
+            new_p, new_o, loss, _ = raw(params, opt_state, batch)
+            return new_p, new_o, loss
+
+        fn = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, ns(P())))
+        args = (params_shape, opt_shape, bspecs)
+        return fn, args
+
+    if sh.kind == "prefill":
+        bspecs = batch_specs(cfg, b, s)
+        bshard = jax.tree.map(ns, shd.batch_specs(mesh, bspecs))
+
+        def prefill_step(params, batch):
+            logits, cache, fill = model.prefill(params, batch)
+            return logits, cache
+
+        cshape = jax.eval_shape(prefill_step, params_shape, bspecs)[1]
+        cshard = jax.tree.map(ns, shd.cache_specs(mesh, cshape, cfg))
+        lshard = ns(P(da if b % _axes(mesh, da) == 0 else None, "model"))
+        fn = jax.jit(prefill_step, in_shardings=(pshard, bshard),
+                     out_shardings=(lshard, cshard))
+        return fn, (params_shape, bspecs)
+
+    # decode
+    from repro.configs.shapes import input_specs
+    spec = input_specs(cfg, shape_name)
+    cshard = jax.tree.map(ns, shd.cache_specs(mesh, spec["cache"], cfg))
+    tshard = ns(P(da if b % _axes(mesh, da) == 0 else None, None))
+
+    def serve_step(params, tokens, cache, fill):
+        return model.decode(params, tokens, cache, fill,
+                            absorbed_mla=cfg.mla_absorb)
+
+    lshard = ns(P(da if b % _axes(mesh, da) == 0 else None, None, "model"))
+    fn = jax.jit(serve_step,
+                 in_shardings=(pshard, tshard, cshard, ns(P())),
+                 out_shardings=(lshard, cshard),
+                 donate_argnums=(2,))   # in-place cache update (serving)
+    return fn, (params_shape, spec["tokens"], spec["cache"], spec["fill"])
+
+
+def _axes(mesh, names):
+    n = 1
+    for a in names:
+        n *= mesh.shape[a]
+    return n
+
+
+# ----------------------------------------------------------------------
+# Collective parsing
+# ----------------------------------------------------------------------
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8": 1}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?((?:[a-z0-9]+)\[[0-9,]*\][^ ]*)(?:[^=]*?)?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Per-device wire bytes by collective kind (ring-algorithm model).
+
+    all-gather: out*(S-1)/S; reduce-scatter: out*(S-1); all-reduce:
+    2*bytes*(S-1)/S; all-to-all: bytes*(S-1)/S; collective-permute: bytes.
+    """
+    per_kind_bytes: Dict[str, float] = {}
+    per_kind_count: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            group = int(gm.group(2))
+        else:
+            gl = _GROUPS_LIST_RE.search(line)
+            group = len(gl.group(1).split(",")) if gl else 2
+        s = max(group, 2)
+        if kind == "all-gather":
+            wire = nbytes * (s - 1) / s
+        elif kind == "reduce-scatter":
+            wire = nbytes * (s - 1)
+        elif kind == "all-reduce":
+            wire = 2 * nbytes * (s - 1) / s
+        elif kind == "all-to-all":
+            wire = nbytes * (s - 1) / s
+        else:  # collective-permute
+            wire = nbytes
+        per_kind_bytes[kind] = per_kind_bytes.get(kind, 0.0) + wire
+        per_kind_count[kind] = per_kind_count.get(kind, 0) + 1
+    return {"wire_bytes_per_device": per_kind_bytes,
+            "counts": per_kind_count,
+            "total_wire_bytes_per_device": sum(per_kind_bytes.values())}
+
+
+# ----------------------------------------------------------------------
+# Cell runner
+# ----------------------------------------------------------------------
+def _unroll_cfg(cfg, n_periods: int):
+    from repro.models import transformer
+    # grad_accum / prefill_microbatch wrap work in lax.scan / lax.map,
+    # which XLA cost analysis counts ONCE — the delta variants disable
+    # them (total flops are invariant to microbatching)
+    if cfg.encoder_decoder:
+        return cfg.scaled(unroll=True, n_layers=n_periods,
+                          n_enc_layers=n_periods, grad_accum=1,
+                          prefill_microbatch=1)
+    P = transformer.period_len(cfg)
+    return cfg.scaled(unroll=True, n_layers=n_periods * P, grad_accum=1,
+                      prefill_microbatch=1)
+
+
+def _n_periods(cfg):
+    from repro.models import transformer
+    if cfg.encoder_decoder:
+        return cfg.n_layers  # == n_enc_layers for whisper-medium
+    return transformer.n_periods(cfg)
+
+
+def compile_cell(arch: str, shape_name: str, multi_pod: bool,
+                 overrides: Dict[str, Any], skip_delta: bool = False
+                 ) -> Dict[str, Any]:
+    import jax
+    from repro import configs
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = configs.get(arch)
+    ok, reason = configs.shape_applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": True,
+                "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    out: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": "2x16x16" if multi_pod else "16x16",
+                           "n_devices": int(np.prod(list(mesh.shape.values()))),
+                           "skipped": False, "overrides": overrides}
+
+    def lower_compile(cfg_x, tag: str):
+        t0 = time.time()
+        with mesh:
+            fn, args = _build_step(cfg_x, shape_name, mesh, {})
+            lowered = fn.lower(*args)
+            compiled = lowered.compile()
+        dt = time.time() - t0
+        ca = compiled.cost_analysis() or {}
+        rec = {"compile_s": round(dt, 1),
+               "flops": float(ca.get("flops", 0.0)),
+               "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+               "transcendentals": float(ca.get("transcendentals", 0.0))}
+        try:
+            text = compiled.as_text()
+            rec["collectives"] = parse_collectives(text)
+            rec["hlo_chars"] = len(text)
+        except Exception as e:  # pragma: no cover
+            rec["collectives_error"] = str(e)
+        m = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(m.argument_size_in_bytes),
+            "output_bytes": int(m.output_size_in_bytes),
+            "temp_bytes": int(m.temp_size_in_bytes),
+            "alias_bytes": int(m.alias_size_in_bytes),
+            "code_bytes": int(m.generated_code_size_in_bytes),
+        }
+        return rec
+
+    cfg_o = cfg.scaled(**overrides) if overrides else cfg
+    out["production"] = lower_compile(cfg_o, "production")
+
+    if not skip_delta:
+        np_total = _n_periods(cfg_o)
+        u1 = lower_compile(_unroll_cfg(cfg_o, 1), "unroll1")
+        u2 = lower_compile(_unroll_cfg(cfg_o, 2), "unroll2")
+        out["unroll1"], out["unroll2"] = u1, u2
+        delta = {}
+        for key in ("flops", "bytes_accessed", "transcendentals"):
+            d = u2[key] - u1[key]
+            delta[key] = u1[key] + (np_total - 1) * d
+        c1 = u1.get("collectives", {}).get("total_wire_bytes_per_device", 0)
+        c2 = u2.get("collectives", {}).get("total_wire_bytes_per_device", 0)
+        delta["collective_wire_bytes_per_device"] = c1 + (np_total - 1) * (c2 - c1)
+        out["delta_total"] = delta
+        out["n_periods"] = np_total
+    return out
+
+
+SHAPE_NAMES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=SHAPE_NAMES + [None])
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-delta", action="store_true")
+    ap.add_argument("--set", nargs="*", default=[],
+                    help="config overrides key=value (ints/floats/strs)")
+    args = ap.parse_args()
+
+    overrides: Dict[str, Any] = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        if v in ("true", "True", "false", "False"):
+            v = v in ("true", "True")
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        overrides[k] = v
+
+    from repro import configs
+    archs = configs.ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = SHAPE_NAMES if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}_{shape}_{'multi' if multi else 'single'}"
+                if overrides:
+                    tag += "_" + "_".join(f"{k}-{v}" for k, v
+                                          in sorted(overrides.items()))
+                path = os.path.join(args.out, tag + ".json")
+                print(f"=== {tag}", flush=True)
+                try:
+                    rec = compile_cell(arch, shape, multi, overrides,
+                                       skip_delta=args.skip_delta)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape, "error": str(e)[:2000]}
+                    failures.append(tag)
+                    print(f"    FAILED: {e}", flush=True)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if "error" not in rec and not rec.get("skipped"):
+                    p = rec["production"]
+                    print(f"    compile {p['compile_s']}s  "
+                          f"flops/dev {p['flops']:.3g}  "
+                          f"temp {p['memory']['temp_bytes']/2**30:.2f} GiB",
+                          flush=True)
+                elif rec.get("skipped"):
+                    print(f"    SKIP: {rec['reason']}", flush=True)
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

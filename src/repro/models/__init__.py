@@ -1,0 +1,5 @@
+"""repro.models - pure-JAX model zoo (scan-over-layers, remat-able)."""
+from .common import ArchConfig
+from .api import Model
+
+__all__ = ["ArchConfig", "Model"]

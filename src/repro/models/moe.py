@@ -1,0 +1,109 @@
+"""Mixture-of-Experts FFN with sort-based, static-shape dispatch.
+
+Design constraints (see DESIGN.md §7):
+  * static shapes only (SPMD dry-run; no ragged ops),
+  * active-FLOP-proportional compute — the capacity buffer is
+    ``top_k * S / E * capacity_factor`` slots per sequence, so HLO FLOPs in
+    cost_analysis reflect the real MoE compute (6*N_active*D accounting),
+  * sharding: experts across the ``model`` axis (EP); token groups (= batch
+    rows) across ``data``; the dispatch sort stays group-local.
+
+Routing uses top-k softmax gating with first-wins capacity dropping and the
+standard load-balance auxiliary loss. Dispatch/combine are scatter/gather by
+flat indices (`mode=drop` handles capacity overflow), which is the
+TPU-friendly static realization of the paper's "streaming" philosophy — no
+data-dependent control flow anywhere.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ArchConfig, Params, dense_init
+
+
+def moe_params(cfg: ArchConfig, key) -> Params:
+    d, ffe = cfg.d_model, cfg.d_ff_expert
+    e = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {"router": dense_init(ks[0], (d, e), 0, cfg.pdtype),
+         "w1": dense_init(ks[1], (e, d, ffe), 1, cfg.pdtype),
+         "w2": dense_init(ks[2], (e, ffe, d), 1, cfg.pdtype),
+         "w3": dense_init(ks[3], (e, d, ffe), 1, cfg.pdtype)}
+    if cfg.n_shared_experts:
+        ff_sh = ffe * cfg.n_shared_experts
+        km = jax.random.split(ks[4], 3)
+        p["shared"] = {"w1": dense_init(km[0], (d, ff_sh), 0, cfg.pdtype),
+                       "w2": dense_init(km[1], (ff_sh, d), 0, cfg.pdtype),
+                       "w3": dense_init(km[2], (d, ff_sh), 0, cfg.pdtype)}
+    return p
+
+
+def _capacity(cfg: ArchConfig, s: int) -> int:
+    c = int(cfg.top_k * s * cfg.capacity_factor / cfg.n_experts)
+    return max(cfg.top_k, c)
+
+
+def apply_moe(cfg: ArchConfig, p: Params, x: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (b, s, d) -> (y, aux_loss). Groups = batch rows."""
+    dt = cfg.cdtype
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(cfg, s)
+    x = x.astype(dt)
+
+    # --- routing (fp32 for stable softmax) ---
+    logits = (x @ p["router"].astype(dt)).astype(jnp.float32)  # (b,s,e)
+    probs = jax.nn.softmax(logits, -1)
+    gate, expert = jax.lax.top_k(probs, k)                     # (b,s,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style): e * sum_e f_e * p_e
+    me = probs.mean(1)                                          # (b,e)
+    ce = jax.nn.one_hot(expert[..., 0], e, dtype=jnp.float32).mean(1)
+    aux = (me * ce).sum(-1).mean() * e
+
+    # --- dispatch: sort tokens by expert within each group ---
+    flat_e = expert.reshape(b, s * k)                           # (b, sk)
+    order = jnp.argsort(flat_e, axis=-1)                        # stable
+    e_sorted = jnp.take_along_axis(flat_e, order, -1)
+    tok_sorted = order // k                                     # source token
+    gate_sorted = jnp.take_along_axis(gate.reshape(b, s * k), order, -1)
+
+    # position of each sorted entry within its expert's capacity buffer
+    seg_start = jax.vmap(lambda es: jnp.searchsorted(es, jnp.arange(e),
+                                                     side="left"))(e_sorted)
+    pos_in_e = jnp.arange(s * k)[None, :] - jnp.take_along_axis(
+        seg_start, e_sorted, -1)
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, e_sorted * cap + pos_in_e, e * cap)  # drop slot
+
+    # gather tokens into (b, e*cap, d) expert buffers
+    src = jnp.take_along_axis(x, tok_sorted[..., None], 1)      # (b, sk, d)
+    buf = jnp.zeros((b, e * cap + 1, d), dt)
+    buf = jax.vmap(lambda bb, sl, sr: bb.at[sl].set(sr, mode="drop"))(
+        buf, slot, src)
+    buf = buf[:, :e * cap].reshape(b, e, cap, d)
+
+    # --- expert FFN (batched GEMMs over the expert axis) ---
+    h = (jax.nn.silu(jnp.einsum("becd,edf->becf", buf, p["w1"].astype(dt)))
+         * jnp.einsum("becd,edf->becf", buf, p["w3"].astype(dt)))
+    y_e = jnp.einsum("becf,efd->becd", h, p["w2"].astype(dt))
+    y_flat = y_e.reshape(b, e * cap, d)
+    y_flat = jnp.concatenate([y_flat, jnp.zeros((b, 1, d), dt)], 1)
+
+    # --- combine: gather back, weight, scatter-add per source token ---
+    slot_g = jnp.where(keep, slot, e * cap)
+    out_tok = jnp.take_along_axis(y_flat, slot_g[..., None], 1)  # (b, sk, d)
+    out_tok = out_tok * (gate_sorted * keep)[..., None].astype(dt)
+    y = jnp.zeros((b, s, d), dt)
+    y = jax.vmap(lambda yy, ti, ot: yy.at[ti].add(ot))(y, tok_sorted, out_tok)
+
+    if cfg.n_shared_experts:
+        sh = p["shared"]
+        hs = jax.nn.silu(x @ sh["w1"].astype(dt)) * (x @ sh["w3"].astype(dt))
+        y = y + hs @ sh["w2"].astype(dt)
+    return y, aux.astype(jnp.float32)

@@ -1,0 +1,159 @@
+"""Mamba-2 block (SSD): projections, causal conv, SSD scan, gated output.
+
+The SSD scan itself runs through ``repro.kernels.ops.ssd`` (chunked Pallas
+kernel on TPU / chunked oracle elsewhere) — the NTX chunk-granular wide
+accumulator. The block follows the Mamba-2 paper: projections produce
+(z, x, B, C, dt); a short causal depthwise conv runs over x, B and C
+(kept as three separate projections/convs — mathematically identical to
+the fused conv over their concatenation, but cleanly tensor-parallel:
+x/z shard over the model axis, the small shared B/C stay replicated);
+A is a scalar decay per head; output is RMSNorm-gated.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref as kref
+from .common import ArchConfig, Params, dense_init, rmsnorm
+
+
+def ssm_params(cfg: ArchConfig, key) -> Params:
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.d_state
+    nh = cfg.ssm_heads
+    k = cfg.d_conv
+    ks = jax.random.split(key, 10)
+    a_init = jnp.exp(jax.random.uniform(ks[9], (nh,), jnp.float32,
+                                        jnp.log(0.25), jnp.log(4.0)))
+    return {
+        "wz": dense_init(ks[0], (d, di), 0, cfg.pdtype),
+        "wx": dense_init(ks[1], (d, di), 0, cfg.pdtype),
+        "wb": dense_init(ks[2], (d, n), 0, cfg.pdtype),
+        "wc": dense_init(ks[3], (d, n), 0, cfg.pdtype),
+        "wdt": dense_init(ks[4], (d, nh), 0, cfg.pdtype),
+        "dt_bias": jnp.zeros((nh,), cfg.pdtype),
+        "conv_x": dense_init(ks[5], (k, di), 0, cfg.pdtype),
+        "conv_x_b": jnp.zeros((di,), cfg.pdtype),
+        "conv_b": dense_init(ks[6], (k, n), 0, cfg.pdtype),
+        "conv_b_b": jnp.zeros((n,), cfg.pdtype),
+        "conv_c": dense_init(ks[7], (k, n), 0, cfg.pdtype),
+        "conv_c_b": jnp.zeros((n,), cfg.pdtype),
+        "A_log": jnp.log(a_init).astype(cfg.pdtype),
+        "D": jnp.ones((nh,), cfg.pdtype),
+        "norm": jnp.ones((di,), cfg.pdtype),
+        "wo": dense_init(ks[8], (di, d), 0, cfg.pdtype),
+    }
+
+
+def _causal_conv(w: jnp.ndarray, b: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv, width K, via K static shifts. x: (bsz, l, c)."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = None
+    l = x.shape[1]
+    for j in range(k):
+        term = w[j] * jax.lax.dynamic_slice_in_dim(pad, j, l, 1)
+        out = term if out is None else out + term
+    return jax.nn.silu(out + b)
+
+
+def _project(cfg: ArchConfig, p: Params, u: jnp.ndarray):
+    dt_ = cfg.cdtype
+    z = u @ p["wz"].astype(dt_)
+    x = u @ p["wx"].astype(dt_)
+    B = u @ p["wb"].astype(dt_)
+    C = u @ p["wc"].astype(dt_)
+    dt = jax.nn.softplus((u @ p["wdt"].astype(dt_)).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    return z, x, B, C, dt
+
+
+def ssm_forward(cfg: ArchConfig, p: Params, u: jnp.ndarray,
+                return_state: bool = False):
+    """u: (bsz, l, d) -> (bsz, l, d) [, decode cache]."""
+    dt_ = cfg.cdtype
+    bsz, l, _ = u.shape
+    di, n, nh, dh = cfg.d_inner, cfg.d_state, cfg.ssm_heads, cfg.ssm_headdim
+    u = u.astype(dt_)
+
+    z, x_pre, B_pre, C_pre, dt = _project(cfg, p, u)
+    x = _causal_conv(p["conv_x"].astype(dt_), p["conv_x_b"].astype(dt_), x_pre)
+    B = _causal_conv(p["conv_b"].astype(dt_), p["conv_b_b"].astype(dt_), B_pre)
+    C = _causal_conv(p["conv_c"].astype(dt_), p["conv_c_b"].astype(dt_), C_pre)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (nh,)
+
+    xh = x.reshape(bsz, l, nh, dh)
+    if return_state:
+        y, state = kref.ssd_scan_chunked_with_state(
+            xh, dt, A, B, C, chunk=cfg.ssm_chunk)
+    else:
+        y = ops.ssd(xh, dt, A, B, C, chunk=cfg.ssm_chunk,
+                    work_dtype=dt_)
+        state = None
+    y = y + p["D"].astype(dt_)[None, None, :, None] * xh
+    y = y.reshape(bsz, l, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["wo"].astype(dt_)
+    if return_state:
+        k = cfg.d_conv
+        tail = lambda t: jax.lax.dynamic_slice_in_dim(
+            jnp.pad(t, ((0, 0), (k - 1, 0), (0, 0))), l, k - 1, 1)
+        return out, {"s": state, "cx": tail(x_pre), "cb": tail(B_pre),
+                     "cc": tail(C_pre)}
+    return out
+
+
+def ssm_init_cache(cfg: ArchConfig, batch: int, dtype) -> Params:
+    nh, n, dh = cfg.ssm_heads, cfg.d_state, cfg.ssm_headdim
+    k = cfg.d_conv
+    return {"s": jnp.zeros((batch, nh, n, dh), jnp.float32),
+            "cx": jnp.zeros((batch, k - 1, cfg.d_inner), dtype),
+            "cb": jnp.zeros((batch, k - 1, n), dtype),
+            "cc": jnp.zeros((batch, k - 1, n), dtype)}
+
+
+def _conv_step(w, b, hist):
+    """hist: (bsz, k, c) -> conv output at the newest position."""
+    return jax.nn.silu((hist * w[None]).sum(1) + b)
+
+
+def ssm_decode(cfg: ArchConfig, p: Params, u: jnp.ndarray, cache: Params):
+    """Single-token recurrent step. u: (bsz, 1, d)."""
+    dt_ = cfg.cdtype
+    bsz = u.shape[0]
+    di, n, nh, dh = cfg.d_inner, cfg.d_state, cfg.ssm_heads, cfg.ssm_headdim
+    u1 = u.astype(dt_)[:, 0]
+
+    z = u1 @ p["wz"].astype(dt_)
+    x_new = u1 @ p["wx"].astype(dt_)
+    b_new = u1 @ p["wb"].astype(dt_)
+    c_new = u1 @ p["wc"].astype(dt_)
+    hx = jnp.concatenate([cache["cx"].astype(dt_), x_new[:, None]], 1)
+    hb = jnp.concatenate([cache["cb"].astype(dt_), b_new[:, None]], 1)
+    hc = jnp.concatenate([cache["cc"].astype(dt_), c_new[:, None]], 1)
+    x = _conv_step(p["conv_x"].astype(dt_), p["conv_x_b"].astype(dt_), hx)
+    B = _conv_step(p["conv_b"].astype(dt_), p["conv_b_b"].astype(dt_), hb)
+    C = _conv_step(p["conv_c"].astype(dt_), p["conv_c_b"].astype(dt_), hc)
+    dt = jax.nn.softplus((u1 @ p["wdt"].astype(dt_)).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))     # (bsz, nh)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    # recurrence: s <- e^{dt A} s + dt * B (outer) x ; y = C . s
+    s = cache["s"]                                               # (bsz,nh,n,dh)
+    decay = jnp.exp(dt * A)                                      # (bsz, nh)
+    xh = x.reshape(bsz, nh, dh).astype(jnp.float32)
+    upd = dt[..., None] * xh                                     # (bsz,nh,dh)
+    s = decay[..., None, None] * s + B.astype(jnp.float32)[:, None, :, None] \
+        * upd[:, :, None, :]
+    y = jnp.einsum("bn,bhnd->bhd", C.astype(jnp.float32), s)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(bsz, di).astype(dt_)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = (y @ p["wo"].astype(dt_))[:, None]
+    ct = cache["cx"].dtype
+    return out, {"s": s, "cx": hx[:, 1:].astype(ct),
+                 "cb": hb[:, 1:].astype(ct), "cc": hc[:, 1:].astype(ct)}

@@ -1,0 +1,443 @@
+"""Generic decoder-only LM covering all assigned decoder families.
+
+Layer heterogeneity (jamba's 1:7 attention:mamba interleave, periodic MoE)
+is handled as ONE ``lax.scan`` over all layers whose body ``lax.switch``-es
+between the distinct layer *kinds* (attn/ssm mixer x moe/mlp/none ffn).
+Parameters and decode caches are stored per-kind (stacked over that kind's
+layers) and dynamically indexed each step. This keeps HLO size O(#kinds)
+AND gives true per-layer remat granularity — an unrolled heterogeneous
+period keeps every sublayer's working set live during its backward
+(measured 4x worse on jamba; nested jax.checkpoint inside a checkpointed
+scan body does not recover it).
+
+Entry points: init / loss / prefill / decode_step — see ``api.py``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import (ArchConfig, Params, apply_mlp, apply_norm, chunked_xent,
+                     embed_params, embed_tokens, mlp_params, norm_params,
+                     remat_wrap, sp_constrain, unembed)
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+
+
+# ----------------------------------------------------------------------
+# Layer schedule
+# ----------------------------------------------------------------------
+def period_len(cfg: ArchConfig) -> int:
+    """Shortest period of the layer-kind pattern (dry-run delta method)."""
+    p = 1
+    if cfg.attn_period:
+        p = cfg.attn_period
+    if cfg.moe and cfg.moe_every > 1:
+        p = math.lcm(p, cfg.moe_every)
+    return p
+
+
+def n_periods(cfg: ArchConfig) -> int:
+    p = period_len(cfg)
+    assert cfg.n_layers % p == 0, (cfg.n_layers, p)
+    return cfg.n_layers // p
+
+
+def _kind_of(cfg: ArchConfig, i: int) -> str:
+    mixer = "attn" if cfg.is_attn_layer(i) else "ssm"
+    if cfg.is_moe_layer(i):
+        ffn = "moe"
+    elif cfg.d_ff:
+        ffn = "mlp"
+    else:
+        ffn = "none"
+    return f"{mixer}_{ffn}"
+
+
+def layer_schedule(cfg: ArchConfig):
+    """Returns (sched, kinds, idx_in_kind): per-layer kind name, the ordered
+    unique kinds, and each layer's index within its kind's stack."""
+    sched = [_kind_of(cfg, i) for i in range(cfg.n_layers)]
+    kinds = list(dict.fromkeys(sched))
+    counters = {k: 0 for k in kinds}
+    idx_in_kind: List[int] = []
+    for k in sched:
+        idx_in_kind.append(counters[k])
+        counters[k] += 1
+    return sched, kinds, idx_in_kind
+
+
+# ----------------------------------------------------------------------
+# Parameters
+# ----------------------------------------------------------------------
+def _layer_params(cfg: ArchConfig, key, kind: str) -> Params:
+    mixer, ffn = kind.split("_")
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {"norm1": norm_params(cfg, cfg.d_model)}
+    if ffn != "none":
+        p["norm2"] = norm_params(cfg, cfg.d_model)
+    if mixer == "attn":
+        p["mixer"] = (attn.mla_params(cfg, k1) if cfg.mla
+                      else attn.gqa_params(cfg, k1))
+    else:
+        p["mixer"] = ssm_mod.ssm_params(cfg, k1)
+    if ffn == "moe":
+        p["ffn"] = moe_mod.moe_params(cfg, k2)
+    elif ffn == "mlp":
+        p["ffn"] = mlp_params(cfg, k3, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def init_params(cfg: ArchConfig, seed: int = 0) -> Params:
+    key = jax.random.PRNGKey(seed)
+    k_emb, k_layers = jax.random.split(key)
+    sched, kinds, _ = layer_schedule(cfg)
+    layers: Dict[str, Params] = {}
+    for kind in kinds:
+        count = sum(1 for k in sched if k == kind)
+        keys = jax.random.split(
+            jax.random.fold_in(k_layers, kinds.index(kind)), count)
+        layers[kind] = jax.vmap(lambda kk: _layer_params(cfg, kk, kind))(keys)
+    params = {"embed": embed_params(cfg, k_emb),
+              "layers": layers,
+              "final_norm": norm_params(cfg, cfg.d_model)}
+    if cfg.n_patches:
+        params["img_proj"] = jnp.eye(cfg.d_model, dtype=cfg.pdtype)
+    return params
+
+
+def _index_tree(tree: Params, idx) -> Params:
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, idx, 0, keepdims=False),
+        tree)
+
+
+def _update_tree(tree: Params, new: Params, idx) -> Params:
+    return jax.tree.map(
+        lambda full, n: jax.lax.dynamic_update_index_in_dim(
+            full, n.astype(full.dtype), idx, 0), tree, new)
+
+
+# ----------------------------------------------------------------------
+# Forward (training)
+# ----------------------------------------------------------------------
+def _apply_kind(cfg: ArchConfig, kind: str, p: Params, x, pos, aux):
+    mixer, ffn = kind.split("_")
+    h = apply_norm(cfg, p["norm1"], x)
+    if mixer == "attn":
+        if cfg.mla:
+            o, _ = attn.mla_forward(cfg, p["mixer"], h, pos)
+        else:
+            o, _ = attn.gqa_forward(cfg, p["mixer"], h, pos)
+    else:
+        o = ssm_mod.ssm_forward(cfg, p["mixer"], h)
+    x = x + o
+    if ffn == "none":
+        return x, aux
+    h = apply_norm(cfg, p["norm2"], x)
+    if ffn == "moe":
+        o, a = moe_mod.apply_moe(cfg, p["ffn"], h)
+        aux = aux + a
+    else:
+        o = apply_mlp(cfg, p["ffn"], h)
+    return x + o, aux
+
+
+def backbone(cfg: ArchConfig, params: Params, x: jnp.ndarray,
+             pos) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    sp = sp_constrain if cfg.sp_residual else (lambda t: t)
+    """Embedded inputs -> final hidden states. Returns (h, moe_aux_loss).
+
+    Homogeneous stacks (9 of 10 assigned archs): one ``lax.scan`` over the
+    stacked layer params — the memory-optimal structure (XLA's backward
+    keeps one scan body's working set live).
+
+    Heterogeneous stacks (jamba): one scan whose body ``lax.switch``-es over
+    the layer kinds. Measured on this backend, a single multi-branch region
+    costs the SUM of its branches' working sets but every alternative
+    (unrolled periods, segmented scans + singleton layers) costs strictly
+    more — see EXPERIMENTS.md §Perf for the measurements. The remaining fit
+    lever is gradient accumulation (cfg.grad_accum), which divides all
+    activation transients.
+    """
+    sched, kinds, idx_in_kind = layer_schedule(cfg)
+    layers = params["layers"]
+
+    if cfg.unroll:
+        aux = jnp.float32(0.0)
+        for i, kind in enumerate(sched):
+            p = _index_tree(layers[kind], idx_in_kind[i])
+            if cfg.remat != "none":
+                # keep remat (with the production policy) in the unrolled
+                # delta-method variant so measured flops/bytes include the
+                # production recompute behaviour
+                f = remat_wrap(cfg, lambda xx, aa, pp, kk=kind: _apply_kind(
+                    cfg, kk, pp, xx, pos, aa))
+                x, aux = f(x, aux, p)
+            else:
+                x, aux = _apply_kind(cfg, kind, p, x, pos, aux)
+        return apply_norm(cfg, params["final_norm"], x), aux
+
+    if len(kinds) == 1:
+        kind = kinds[0]
+
+        def body(carry, p):
+            x, aux = carry
+            x = sp(x)                  # SP: carry sharded (data, model, -)
+            x, aux = _apply_kind(cfg, kind, p, x, pos, aux)
+            return (sp(x), aux), None
+
+        body = remat_wrap(cfg, body)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), layers[kind])
+        return apply_norm(cfg, params["final_norm"], x), aux
+
+    kind_ids = jnp.asarray([kinds.index(k) for k in sched], jnp.int32)
+    idxs = jnp.asarray(idx_in_kind, jnp.int32)
+
+    def branch(kind):
+        def br(x, aux, idx):
+            p = _index_tree(layers[kind], idx)
+            return _apply_kind(cfg, kind, p, x, pos, aux)
+        return br
+
+    branches = [branch(k) for k in kinds]
+
+    def body(carry, step):
+        x, aux = carry
+        kid, idx = step
+        x = sp(x)
+        x, aux = jax.lax.switch(kid, branches, x, aux, idx)
+        return (sp(x), aux), None
+
+    body = remat_wrap(cfg, body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), (kind_ids, idxs))
+    return apply_norm(cfg, params["final_norm"], x), aux
+
+
+def embed_inputs(cfg: ArchConfig, params: Params, batch: Dict[str, Any]):
+    """Token embedding (+ VLM patch stub: first n_patches positions come
+    from precomputed patch embeddings)."""
+    x = embed_tokens(cfg, params["embed"], batch["tokens"])
+    if cfg.n_patches:
+        img = batch["img_embeds"].astype(cfg.cdtype) @ \
+            params["img_proj"].astype(cfg.cdtype)
+        x = jnp.concatenate([img, x[:, cfg.n_patches:]], 1)
+    return x
+
+
+def positions(cfg: ArchConfig, batch: Dict[str, Any]) -> jnp.ndarray:
+    b, s = batch["tokens"].shape
+    if cfg.mrope:
+        if "pos3" in batch:
+            return batch["pos3"]
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        return jnp.broadcast_to(pos[None], (3, b, s))
+    return jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: Dict[str, Any]):
+    x = embed_inputs(cfg, params, batch)
+    pos = positions(cfg, batch)
+    h, aux = backbone(cfg, params, x, pos)
+    mask = batch.get("loss_mask")
+    loss = chunked_xent(cfg, params["embed"], h, batch["labels"], mask)
+    total = loss + 0.01 * aux
+    return total, {"xent": loss, "moe_aux": aux}
+
+
+# ----------------------------------------------------------------------
+# KV / state cache + decode / prefill
+# ----------------------------------------------------------------------
+def _kind_cache(cfg: ArchConfig, kind: str, batch: int, seq: int, dtype):
+    mixer = kind.split("_")[0]
+    if mixer == "attn":
+        return (attn.mla_init_cache(cfg, batch, seq, dtype) if cfg.mla
+                else attn.gqa_init_cache(cfg, batch, seq, dtype))
+    return ssm_mod.ssm_init_cache(cfg, batch, dtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq: int,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    sched, kinds, _ = layer_schedule(cfg)
+    caches = {}
+    for kind in kinds:
+        count = sum(1 for k in sched if k == kind)
+        one = _kind_cache(cfg, kind, batch, seq, dtype)
+        caches[kind] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (count,) + a.shape), one)
+    return caches
+
+
+def _mixer_decode(cfg: ArchConfig, kind: str, p, h, pos, c, fill,
+                  absorbed_mla: bool):
+    mixer = kind.split("_")[0]
+    if mixer == "attn":
+        if cfg.mla:
+            return attn.mla_decode(cfg, p["mixer"], h, pos, c, fill,
+                                   absorbed=absorbed_mla)
+        return attn.gqa_decode(cfg, p["mixer"], h, pos, c, fill)
+    return ssm_mod.ssm_decode(cfg, p["mixer"], h, c)
+
+
+def decode_step(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
+                cache: Dict[str, Any], fill: jnp.ndarray,
+                absorbed_mla: bool = False):
+    """tokens: (b, s_new) -> (logits (b, s_new, vocab), new cache)."""
+    b, s = tokens.shape
+    x = embed_tokens(cfg, params["embed"], tokens)
+    if cfg.mrope:
+        pos1 = fill + jnp.arange(s)[None]
+        pos = jnp.broadcast_to(pos1[None], (3, b, s))
+    else:
+        pos = jnp.broadcast_to(fill + jnp.arange(s)[None], (b, s))
+    sched, kinds, idx_in_kind = layer_schedule(cfg)
+    layers = params["layers"]
+
+    def apply_one(kind, idx, x, caches):
+        p = _index_tree(layers[kind], idx)
+        c = _index_tree(caches[kind], idx)
+        h = apply_norm(cfg, p["norm1"], x)
+        o, new_c = _mixer_decode(cfg, kind, p, h, pos, c, fill, absorbed_mla)
+        x = x + o
+        ffn = kind.split("_")[1]
+        if ffn != "none":
+            h = apply_norm(cfg, p["norm2"], x)
+            if ffn == "moe":
+                o, _ = moe_mod.apply_moe(cfg, p["ffn"], h)
+            else:
+                o = apply_mlp(cfg, p["ffn"], h)
+            x = x + o
+        caches = dict(caches)
+        caches[kind] = _update_tree(caches[kind], new_c, idx)
+        return x, caches
+
+    if cfg.unroll:
+        for i, kind in enumerate(sched):
+            x, cache = apply_one(kind, idx_in_kind[i], x, cache)
+    else:
+        kind_ids = jnp.asarray([kinds.index(k) for k in sched], jnp.int32)
+        idxs = jnp.asarray(idx_in_kind, jnp.int32)
+        branches = [(lambda kn: lambda x, cc, i: apply_one(kn, i, x, cc))(k)
+                    for k in kinds]
+
+        def body(carry, step):
+            x, caches = carry
+            kid, idx = step
+            x, caches = jax.lax.switch(kid, branches, x, caches, idx)
+            return (x, caches), None
+
+        (x, cache), _ = jax.lax.scan(body, (x, cache), (kind_ids, idxs))
+
+    h = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], h)
+    return logits, cache
+
+
+def _mixer_prefill(cfg: ArchConfig, kind: str, p, h, pos, cache_len: int):
+    """Full-sequence mixer that also returns this layer's cache entry."""
+    mixer = kind.split("_")[0]
+    if mixer == "attn":
+        if cfg.mla:
+            o, (c_kv, k_rope) = attn.mla_forward(cfg, p["mixer"], h, pos)
+            c = {"c_kv": _pad_seq(c_kv, cache_len, 1),
+                 "k_rope": _pad_seq(k_rope, cache_len, 2)}
+        else:
+            o, (k, v) = attn.gqa_forward(cfg, p["mixer"], h, pos)
+            c = {"k": _pad_seq(k, cache_len, 2),
+                 "v": _pad_seq(v, cache_len, 2)}
+        return o, c
+    return ssm_mod.ssm_forward(cfg, p["mixer"], h, return_state=True)
+
+
+def prefill(cfg: ArchConfig, params: Params, batch: Dict[str, Any],
+            cache_len: Optional[int] = None):
+    """Full-sequence forward that also fills the cache.
+
+    Returns (last-position logits, cache, fill). With
+    ``cfg.prefill_microbatch > 1`` the request batch is processed in
+    sequential chunks (serving-style chunked prefill) — divides peak
+    activation memory by the chunk count at unchanged total compute."""
+    mb = max(1, cfg.prefill_microbatch)
+    if mb > 1 and batch["tokens"].shape[0] % mb == 0:
+        def split(path, leaf):
+            name = getattr(path[-1], "key", None)
+            if name == "pos3":
+                x = leaf.reshape(leaf.shape[0], mb, -1, *leaf.shape[2:])
+                return jnp.moveaxis(x, 1, 0)
+            return leaf.reshape(mb, -1, *leaf.shape[1:])
+        chunks = jax.tree_util.tree_map_with_path(split, batch)
+        logits, caches, fill = jax.lax.map(
+            lambda c: _prefill_impl(cfg, params, c, cache_len), chunks)
+        logits = logits.reshape(-1, logits.shape[-1])
+        # cache leaves: (mb, L, b/mb, ...) -> (L, b, ...)
+        caches = jax.tree.map(
+            lambda a: jnp.moveaxis(a, 0, 1).reshape(
+                a.shape[1], -1, *a.shape[3:]), caches)
+        return logits, caches, batch["tokens"].shape[1]
+    return _prefill_impl(cfg, params, batch, cache_len)
+
+
+def _prefill_impl(cfg: ArchConfig, params: Params, batch: Dict[str, Any],
+                  cache_len: Optional[int] = None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    x = embed_inputs(cfg, params, batch)
+    pos = positions(cfg, batch)
+    sched, kinds, idx_in_kind = layer_schedule(cfg)
+    layers = params["layers"]
+    caches = init_cache(cfg, b, cache_len, jnp.bfloat16)
+
+    def apply_one(kind, idx, x, caches):
+        p = _index_tree(layers[kind], idx)
+        h = apply_norm(cfg, p["norm1"], x)
+        o, new_c = _mixer_prefill(cfg, kind, p, h, pos, cache_len)
+        x = x + o
+        ffn = kind.split("_")[1]
+        if ffn != "none":
+            h = apply_norm(cfg, p["norm2"], x)
+            if ffn == "moe":
+                o, _ = moe_mod.apply_moe(cfg, p["ffn"], h)
+            else:
+                o = apply_mlp(cfg, p["ffn"], h)
+            x = x + o
+        caches = dict(caches)
+        caches[kind] = _update_tree(caches[kind], new_c, idx)
+        return x, caches
+
+    if cfg.unroll:
+        for i, kind in enumerate(sched):
+            x, caches = apply_one(kind, idx_in_kind[i], x, caches)
+    else:
+        kind_ids = jnp.asarray([kinds.index(k) for k in sched], jnp.int32)
+        idxs = jnp.asarray(idx_in_kind, jnp.int32)
+        branches = [(lambda kn: lambda x, cc, i: apply_one(kn, i, x, cc))(k)
+                    for k in kinds]
+
+        sp = sp_constrain if cfg.sp_residual else (lambda t: t)
+
+        def body(carry, step):
+            x, caches = carry
+            kid, idx = step
+            x = sp(x)
+            x, caches = jax.lax.switch(kid, branches, x, caches, idx)
+            return (sp(x), caches), None
+
+        (x, caches), _ = jax.lax.scan(body, (x, caches), (kind_ids, idxs))
+
+    h = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], h[:, -1:])
+    return logits[:, 0], caches, s
+
+
+def _pad_seq(x: jnp.ndarray, to: int, axis: int) -> jnp.ndarray:
+    cur = x.shape[axis]
+    if cur == to:
+        return x.astype(jnp.bfloat16)
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, to - cur)
+    return jnp.pad(x, widths).astype(jnp.bfloat16)

@@ -1,0 +1,3 @@
+from . import ntx, dnn, tpu_roofline
+
+__all__ = ["ntx", "dnn", "tpu_roofline"]

@@ -1,0 +1,126 @@
+"""The paper's analytical performance model (§III-B/C of the paper, and
+the execution-time model of [12] it references).
+
+Kernel time on one cluster = pipelined max(compute, dma) per double-buffered
+tile (core/scheduler.py), with the practically-achievable rates derated by
+the measured 13% TCDM banking-conflict probability:
+
+    compute rate = 20 Gflop/s * (1 - 0.13) = 17.4 Gflop/s
+    memory rate  =  5 GB/s    * (1 - 0.13) = 4.35 GB/s
+
+This module evaluates the paper's §III-B kernel suite and reproduces the
+Figure-5 roofline points, Table-I figures of merit, and the NTX 16x..512x
+cluster-scaling efficiencies of Table II / Figures 6-7.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.cluster import NtxClusterSpec, PAPER_CLUSTER, ntx_multi_cluster
+from repro.core import scheduler as sched
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPoint:
+    name: str
+    flops: int
+    bytes_dram: int
+    time_s: float
+
+    @property
+    def intensity(self) -> float:
+        return self.flops / max(1, self.bytes_dram)
+
+    @property
+    def gflops(self) -> float:
+        return self.flops / self.time_s / 1e9
+
+    @property
+    def bw_gbs(self) -> float:
+        return self.bytes_dram / self.time_s / 1e9
+
+
+def _run(name: str, schedule: sched.TileSchedule,
+         spec: NtxClusterSpec = PAPER_CLUSTER,
+         setup_cycles: int = 100) -> KernelPoint:
+    t = schedule.time_s(spec.practical_flops, spec.practical_bw,
+                        overlap=True, setup_cycles=setup_cycles,
+                        freq_hz=spec.ntx_freq_hz)
+    return KernelPoint(name, schedule.total_flops, schedule.total_bytes, t)
+
+
+# ----------------------------------------------------------------------
+# Paper §III-B kernel suite
+# ----------------------------------------------------------------------
+def axpy(n: int, spec=PAPER_CLUSTER) -> KernelPoint:
+    return _run(f"AXPY {n}", sched.schedule_axpy(n, spec.tcdm_bytes), spec)
+
+
+def gemv(m: int, n: int, spec=PAPER_CLUSTER) -> KernelPoint:
+    return _run(f"GEMV {m}", sched.schedule_gemv(m, n, spec.tcdm_bytes), spec)
+
+
+def gemm(m: int, n: int, k: int, spec=PAPER_CLUSTER) -> KernelPoint:
+    return _run(f"GEMM {m}", sched.schedule_gemm(m, n, k, spec.tcdm_bytes),
+                spec)
+
+
+def conv2d(h: int, w: int, ksize: int, spec=PAPER_CLUSTER,
+           c_in: int = 16, c_out: int = 16) -> KernelPoint:
+    """DNN-style multi-channel convolution (the paper's conv workload)."""
+    return _run(f"CONV {ksize}x{ksize}",
+                sched.schedule_conv2d(h, w, ksize, ksize, spec.tcdm_bytes,
+                                      c_in=c_in, c_out=c_out), spec)
+
+
+def laplace(dim: int, n: int, spec=PAPER_CLUSTER) -> KernelPoint:
+    points = 2 * dim + 1
+    shape = tuple([n] * dim)
+    return _run(f"LAP{dim}D", sched.schedule_stencil(shape, points,
+                                                     spec.tcdm_bytes), spec)
+
+
+def diffusion(n: int, spec=PAPER_CLUSTER) -> KernelPoint:
+    # 13-coefficient stencil, decomposed 9+2+2 (paper §III-B3)
+    return _run("DIFF", sched.schedule_stencil((n, n), 13, spec.tcdm_bytes),
+                spec)
+
+
+def figure5_suite(spec=PAPER_CLUSTER) -> Dict[str, KernelPoint]:
+    """The kernel/size grid of the paper's Figure 5."""
+    out: Dict[str, KernelPoint] = {}
+    for n in (1 << 10, 1 << 14, 1 << 18, 1 << 22):
+        p = axpy(n, spec)
+        out[f"AXPY {n}"] = p
+    for m in (16, 128, 1024, 16384):
+        out[f"GEMV {m}"] = gemv(m, m, spec)
+    for m in (16, 64, 256, 1024):
+        out[f"GEMM {m}"] = gemm(m, m, m, spec)
+    for ks in (3, 5, 7):
+        out[f"CONV {ks}x{ks}"] = conv2d(256, 256, ks, spec)
+    for d in (1, 2, 3):
+        n = {1: 1 << 22, 2: 2048, 3: 160}[d]
+        out[f"LAP{d}D"] = laplace(d, n, spec)
+    out["DIFF"] = diffusion(2048, spec)
+    return out
+
+
+# ----------------------------------------------------------------------
+# Paper headline claims (tested in tests/test_perfmodel.py)
+# ----------------------------------------------------------------------
+def peak_utilization_bound(spec=PAPER_CLUSTER) -> float:
+    """'up to 87% of peak' — the banking-conflict bound."""
+    return spec.practical_flops / spec.peak_flops
+
+
+def table1_figures(spec=PAPER_CLUSTER) -> Dict[str, float]:
+    return {
+        "peak_gflops": spec.peak_flops / 1e9,
+        "peak_bw_gbs": spec.peak_bw / 1e9,
+        "practical_gflops": spec.practical_flops / 1e9,
+        "power_w": spec.power_w,
+        "efficiency_gflops_per_w": spec.peak_flops / spec.power_w / 1e9,
+        "pj_per_flop": spec.pj_per_flop,
+        "area_mm2": spec.area_mm2,
+    }

@@ -1,0 +1,95 @@
+"""TPU roofline terms from dry-run JSONs (assignment §Roofline).
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs/bytes use the dry-run's delta-method totals (per-device program
+flops x chips = global); collective_bytes likewise (wire bytes per device x
+chips). Constants: v5e 197 Tflop/s bf16, 819 GB/s HBM, 50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def model_flops(cfg, shape_kind: str, tokens: int) -> float:
+    """6*N_active*D for training, 2*N_active*D for inference."""
+    from repro.configs.shapes import active_params
+    n = active_params(cfg)
+    mult = 6 if shape_kind == "train" else 2
+    return mult * n * tokens
+
+
+def cell_roofline(rec: dict) -> Optional[dict]:
+    """Derive the three terms (seconds) for one dry-run cell record."""
+    if rec.get("skipped") or "error" in rec:
+        return None
+    chips = rec["n_devices"]
+    src = rec.get("delta_total") or rec["production"]
+    flops_dev = src.get("flops", rec["production"]["flops"])
+    bytes_dev = src.get("bytes_accessed", rec["production"]["bytes_accessed"])
+    coll_dev = src.get("collective_wire_bytes_per_device")
+    if coll_dev is None:
+        coll_dev = rec["production"].get("collectives", {}).get(
+            "total_wire_bytes_per_device", 0.0)
+    t_compute = flops_dev / PEAK_FLOPS          # per-device program seconds
+    t_memory = bytes_dev / HBM_BW
+    t_collective = coll_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    dom = max(terms, key=terms.get)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "flops_global": flops_dev * chips,
+        "bytes_global": bytes_dev * chips,
+        "collective_bytes_global": coll_dev * chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_collective, "dominant": dom,
+        "bound_time_s": max(terms.values()),
+        "memory_fit": rec["production"]["memory"],
+    }
+
+
+def load_all(directory: str) -> List[dict]:
+    out = []
+    for name in sorted(os.listdir(directory)):
+        if name.endswith(".json"):
+            with open(os.path.join(directory, name)) as f:
+                out.append(json.load(f))
+    return out
+
+
+def roofline_table(directory: str, mesh: str = "16x16") -> List[dict]:
+    """Full baseline table with MODEL_FLOPS ratio per cell."""
+    from repro import configs
+    from repro.configs.shapes import SHAPES
+    rows = []
+    for rec in load_all(directory):
+        if rec.get("mesh") != mesh or rec.get("overrides"):
+            continue
+        r = cell_roofline(rec)
+        if r is None:
+            rows.append({"arch": rec.get("arch"), "shape": rec.get("shape"),
+                         "skipped": True,
+                         "reason": rec.get("reason", rec.get("error",
+                                                             ""))[:120]})
+            continue
+        cfg = configs.get(rec["arch"])
+        sh = SHAPES[rec["shape"]]
+        tokens = sh.global_batch * (sh.seq_len if sh.kind != "decode" else 1)
+        mf = model_flops(cfg, sh.kind, tokens)
+        r["model_flops"] = mf
+        r["useful_ratio"] = mf / max(r["flops_global"], 1.0)
+        # roofline fraction: useful model flops per bound-time vs peak
+        r["roofline_fraction"] = (mf / r["bound_time_s"]) / (
+            r["chips"] * PEAK_FLOPS)
+        rows.append(r)
+    return rows

@@ -1,0 +1,4 @@
+from .train import Trainer, TrainConfig, make_train_step
+from .serve import Server, ServeConfig
+
+__all__ = ["Trainer", "TrainConfig", "make_train_step", "Server", "ServeConfig"]

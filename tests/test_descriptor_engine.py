@@ -1,0 +1,133 @@
+"""Property-based tests of the NTX descriptor engine (core invariants).
+
+The sequential interpreter is the oracle; the vectorized numpy and jittable
+jnp paths must agree on every valid descriptor. Hypothesis drives random
+loop nests, strides and opcodes.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Agu, Descriptor, Opcode, argmax, axpy, gemm, gemv,
+                        hw_steps_to_strides, strides_to_hw_steps)
+from repro.core import engine
+
+MEM = 4096
+
+
+@st.composite
+def reduction_descriptors(draw):
+    """Random MAC/VSUM/MIN/MAX reductions with disjoint memory regions."""
+    n_loops = draw(st.integers(1, 4))
+    bounds = tuple(draw(st.integers(1, 5)) for _ in range(n_loops))
+    init_level = draw(st.integers(1, n_loops))
+    op = draw(st.sampled_from([Opcode.MAC, Opcode.VSUM, Opcode.MIN,
+                               Opcode.MAX, Opcode.ARGMAX, Opcode.ARGMIN]))
+    # read strides: arbitrary small; write strides nonzero only at
+    # levels >= store_level, chosen to be injective (mixed radix)
+    rd_strides = tuple(draw(st.integers(0, 7)) for _ in range(n_loops))
+    rd2_strides = tuple(draw(st.integers(0, 7)) for _ in range(n_loops))
+    st_strides = [0] * n_loops
+    mult = 1
+    for l in range(init_level, n_loops):
+        st_strides[l] = mult
+        mult *= bounds[l]
+    return Descriptor(
+        bounds=bounds, opcode=op, init_level=init_level,
+        store_level=init_level,
+        agu0=Agu(0, rd_strides),
+        agu1=Agu(1024, rd2_strides),
+        agu2=Agu(2048, tuple(st_strides)))
+
+
+@given(reduction_descriptors(), st.integers(0, 2**31 - 1))
+@settings(max_examples=60, deadline=None)
+def test_vectorized_matches_sequential(desc, seed):
+    rng = np.random.default_rng(seed)
+    mem = rng.standard_normal(MEM).astype(np.float32)
+    out_seq = engine.execute(desc, mem)
+    out_vec = engine.execute_vectorized(desc, mem)
+    np.testing.assert_allclose(out_seq, out_vec, rtol=1e-5, atol=1e-5)
+
+
+@given(reduction_descriptors(), st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_jax_matches_sequential(desc, seed):
+    rng = np.random.default_rng(seed)
+    mem = rng.standard_normal(MEM).astype(np.float32)
+    out_seq = engine.execute(desc, mem)
+    out_jax = np.asarray(engine.execute_jax(desc, mem))
+    np.testing.assert_allclose(out_seq, out_jax, rtol=1e-4, atol=1e-4)
+
+
+@given(st.lists(st.integers(-9, 9), min_size=5, max_size=5),
+       st.lists(st.integers(1, 9), min_size=5, max_size=5))
+@settings(max_examples=100, deadline=None)
+def test_hw_step_encoding_roundtrip(strides, bounds):
+    """The silicon's delta-step encoding is affine-equivalent (§II-D)."""
+    steps = strides_to_hw_steps(strides, bounds)
+    assert tuple(hw_steps_to_strides(steps, bounds)) == tuple(strides)
+
+
+def test_gemv_against_numpy():
+    rng = np.random.default_rng(0)
+    m, n = 13, 37
+    mem = np.zeros(MEM, np.float32)
+    A = rng.standard_normal((m, n)).astype(np.float32)
+    x = rng.standard_normal(n).astype(np.float32)
+    mem[:m * n] = A.ravel()
+    mem[1024:1024 + n] = x
+    d = gemv(m, n, 0, 1024, 2048)
+    out = engine.execute(d, mem)
+    np.testing.assert_allclose(out[2048:2048 + m], A @ x, rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_gemm_against_numpy():
+    rng = np.random.default_rng(1)
+    m, n, k = 7, 5, 11
+    mem = np.zeros(MEM, np.float32)
+    A = rng.standard_normal((m, k)).astype(np.float32)
+    B = rng.standard_normal((k, n)).astype(np.float32)
+    mem[:m * k] = A.ravel()
+    mem[1024:1024 + k * n] = B.ravel()
+    d = gemm(m, n, k, 0, 1024, 2048)
+    out = engine.execute(d, mem)
+    np.testing.assert_allclose(out[2048:2048 + m * n].reshape(m, n), A @ B,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_argmax_first_occurrence():
+    mem = np.zeros(64, np.float32)
+    mem[:8] = [1, 5, 5, 2, 5, 0, 5, 3]
+    out = engine.execute(argmax(8, 0, 32), mem)
+    assert out[32] == 1  # first max wins (hardware index counter)
+
+
+def test_axpy_matches_blas_semantics():
+    rng = np.random.default_rng(2)
+    mem = np.zeros(256, np.float32)
+    mem[:50] = rng.standard_normal(50)
+    mem[64:114] = rng.standard_normal(50)
+    d = axpy(50, -1.5, 0, 64, 64)
+    out = engine.execute(d, mem)
+    np.testing.assert_allclose(out[64:114], -1.5 * mem[:50] + mem[64:114],
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_descriptor_validation():
+    with pytest.raises(ValueError):
+        Descriptor(bounds=(2, 2, 2, 2, 2, 2), opcode=Opcode.MAC)  # >5 loops
+    with pytest.raises(ValueError):
+        Descriptor(bounds=(4,), opcode=Opcode.MAC, init_level=2)
+    with pytest.raises(ValueError):
+        Descriptor(bounds=(4,), opcode=Opcode.COPY, init_level=1)
+    with pytest.raises(ValueError):
+        Descriptor(bounds=(1 << 17,), opcode=Opcode.COPY, strict_hw=True)
+
+
+def test_flop_and_byte_accounting():
+    d = gemm(8, 8, 8, 0, 512, 1024)
+    assert d.flops() == 2 * 8 * 8 * 8
+    assert d.num_stores == 64
+    assert d.bytes_moved() == 4 * (2 * 512 + 64)

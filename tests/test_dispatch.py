@@ -1,0 +1,68 @@
+"""Descriptor -> kernel dispatch must agree with the functional engine
+(the decoder's contract), on both the oracle and Pallas backends."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (Agu, Descriptor, Opcode, argmax, axpy, engine, gemm,
+                        gemv, memcpy, memset, relu)
+from repro.core.dispatch import dispatch, _match_gemm, _match_gemv
+from repro.kernels import ops
+
+RNG = np.random.default_rng(7)
+
+
+def _mem(n=4096):
+    return RNG.standard_normal(n).astype(np.float32)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
+def test_dispatch_gemm(backend):
+    m_, n_, k_ = 12, 9, 17
+    mem = _mem()
+    d = gemm(m_, n_, k_, 0, 1024, 2048)
+    assert _match_gemm(d) == (m_, n_, k_)
+    want = engine.execute(d, mem)
+    with ops.backend(backend):
+        got = np.asarray(dispatch(d, mem))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
+def test_dispatch_gemv(backend):
+    m_, n_ = 21, 33
+    mem = _mem()
+    d = gemv(m_, n_, 0, 1024, 2048)
+    assert _match_gemv(d) == (m_, n_)
+    want = engine.execute(d, mem)
+    with ops.backend(backend):
+        got = np.asarray(dispatch(d, mem))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("make", [
+    lambda: axpy(100, 1.7, 0, 512, 1024),
+    lambda: memcpy(64, 0, 1024),
+    lambda: memset(64, 3.25, 1024),
+    lambda: relu(128, 0, 1024),
+    lambda: argmax(77, 0, 1024),
+])
+def test_dispatch_command_set(make):
+    d = make()
+    mem = _mem()
+    want = engine.execute(d, mem)
+    with ops.backend("pallas_interpret"):
+        got = np.asarray(dispatch(d, mem))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_dispatch_fallback_for_odd_nest():
+    """A strided nest with no blocked kernel goes through the engine."""
+    d = Descriptor(bounds=(3, 4), opcode=Opcode.MAC, init_level=1,
+                   store_level=1, agu0=Agu(0, (2, 9)), agu1=Agu(100, (3, 0)),
+                   agu2=Agu(300, (0, 2)))
+    mem = _mem(1024)
+    want = engine.execute(d, mem)
+    got = np.asarray(dispatch(d, mem))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)

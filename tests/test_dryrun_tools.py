@@ -1,0 +1,83 @@
+"""Dry-run tooling: HLO collective parser, tile scheduler, roofline math."""
+import numpy as np
+import pytest
+
+from repro.core import scheduler as sched
+from repro.core.cluster import PAPER_CLUSTER
+from repro.launch.dryrun import parse_collectives, _shape_bytes
+
+
+HLO_SAMPLE = """
+  %ag = bf16[256,4096]{1,0} all-gather(bf16[16,4096]{1,0} %p0), replica_groups=[32,16]<=[512], dimensions={0}
+  %ar.1 = f32[1024]{0} all-reduce(f32[1024]{0} %x), replica_groups=[2,256]<=[512], to_apply=%add
+  %rs = f32[8,128]{1,0} reduce-scatter(f32[128,128]{1,0} %y), replica_groups=[32,16]<=[512], dimensions={0}
+  %cp = bf16[64,64]{1,0} collective-permute(bf16[64,64]{1,0} %z), source_target_pairs={{0,1},{1,2}}
+  %a2a = f32[16,16]{1,0} all-to-all(f32[16,16]{1,0} %w), replica_groups={{0,1,2,3}}
+  %ar-start = f32[512]{0} all-reduce-start(f32[512]{0} %q), replica_groups=[2,256]<=[512]
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[256,4096]{1,0}") == 256 * 4096 * 2
+    assert _shape_bytes("f32[1024]{0}") == 4096
+    assert _shape_bytes("(f32[8]{0}, bf16[4]{0})") == 32 + 8
+
+
+def test_parse_collectives_kinds_and_wire_model():
+    r = parse_collectives(HLO_SAMPLE)
+    c = r["counts"]
+    assert c["all-gather"] == 1
+    assert c["all-reduce"] == 2          # incl. the -start form
+    assert c["reduce-scatter"] == 1
+    assert c["collective-permute"] == 1
+    assert c["all-to-all"] == 1
+    w = r["wire_bytes_per_device"]
+    # all-gather over group 16: out*(15/16)
+    assert w["all-gather"] == pytest.approx(256 * 4096 * 2 * 15 / 16)
+    # all-reduce over group 256: 2*bytes*(255/256)
+    assert w["all-reduce"] == pytest.approx(
+        2 * 4096 * 255 / 256 + 2 * 2048 * 255 / 256)
+    # reduce-scatter out 8x128 over group 16: out*(S-1)
+    assert w["reduce-scatter"] == pytest.approx(8 * 128 * 4 * 15)
+    assert w["collective-permute"] == pytest.approx(64 * 64 * 2)
+
+
+def test_tile_schedule_overlap_time():
+    s = sched.TileSchedule([sched.Tile(1000, 0, 8000),
+                            sched.Tile(1000, 0, 8000)], 1000)
+    # compute-bound: 8000 flops at 1e3 flop/s = 8 s/tile > dma 1 s/tile
+    t = s.time_s(1e3, 1e3, overlap=True)
+    assert t == pytest.approx(8 + 8 + 1)   # fill + 2 tiles
+    t2 = s.time_s(1e3, 1e3, overlap=False)
+    assert t2 == pytest.approx(18)
+
+
+def test_gemm_schedule_intensity_grows():
+    small = sched.schedule_gemm(64, 64, 64, PAPER_CLUSTER.tcdm_bytes)
+    big = sched.schedule_gemm(1024, 1024, 1024, PAPER_CLUSTER.tcdm_bytes)
+    i_small = small.total_flops / small.total_bytes
+    i_big = big.total_flops / big.total_bytes
+    assert i_big > i_small           # paper: GEMM becomes compute-bound
+
+
+def test_pick_matmul_blocks_aligned_and_fit():
+    from repro.core.cluster import TPU_V5E
+    bm, bn, bk = sched.pick_matmul_blocks(4096, 4096, 4096, TPU_V5E)
+    assert bm % 128 == 0 and bn % 128 == 0 and bk % 128 == 0
+    ws = 2 * 4 * (bm * bk + bk * bn + bm * bn)
+    assert ws <= TPU_V5E.vmem_bytes // 4
+
+
+def test_roofline_cell_math():
+    from repro.perfmodel.tpu_roofline import cell_roofline, PEAK_FLOPS
+    rec = {"arch": "x", "shape": "train_4k", "mesh": "16x16",
+           "n_devices": 256, "skipped": False,
+           "production": {"flops": 1e13, "bytes_accessed": 1e11,
+                          "memory": {"temp_bytes": 1}},
+           "delta_total": {"flops": 2e13, "bytes_accessed": 2e11,
+                           "transcendentals": 0,
+                           "collective_wire_bytes_per_device": 5e9}}
+    r = cell_roofline(rec)
+    assert r["t_compute_s"] == pytest.approx(2e13 / PEAK_FLOPS)
+    assert r["t_collective_s"] == pytest.approx(5e9 / 50e9)
+    assert r["dominant"] == "memory"

@@ -1,0 +1,202 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes (assignment deliverable c)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _arr(shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray((RNG.standard_normal(shape) * scale).astype(dtype))
+
+
+# ----------------------------------------------------------------------
+# GEMM
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 384, 128),
+                                   (100, 70, 50), (8, 16, 24)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_sweep(m, k, n, dtype):
+    a = _arr((m, k)).astype(dtype)
+    b = _arr((k, n)).astype(dtype)
+    with ops.backend("pallas_interpret"):
+        got = ops.gemm(a, b)
+    want = ref.gemm(a, b)
+    tol = 1e-3 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+def test_gemm_compensated_precision():
+    """The Kahan path must be at least as accurate as plain accumulation."""
+    a = _arr((128, 2048), scale=100.0)
+    b = _arr((2048, 128), scale=100.0)
+    ref64 = np.asarray(a, np.float64) @ np.asarray(b, np.float64)
+    with ops.backend("pallas_interpret"):
+        plain = np.asarray(ops.gemm(a, b), np.float64)
+        comp = np.asarray(ops.gemm(a, b, compensated=True), np.float64)
+    assert np.abs(comp - ref64).max() <= np.abs(plain - ref64).max() * 1.01
+
+
+# ----------------------------------------------------------------------
+# Elementwise command set
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("op", ["axpy", "add", "sub", "mul", "mask", "relu",
+                                "thresh", "copy", "set"])
+@pytest.mark.parametrize("shape", [(3, 700), (1, 1024), (5, 128)])
+def test_elementwise_sweep(op, shape):
+    x = _arr(shape)
+    y = _arr(shape) if op in ("axpy", "add", "sub", "mul", "mask") else None
+    with ops.backend("pallas_interpret"):
+        got = ops.elementwise(op, x, y, imm=0.3)
+    want = ref.elementwise(op, x, y, imm=0.3)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# Reductions
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("op", ["sum", "min", "max", "argmin", "argmax"])
+@pytest.mark.parametrize("shape", [(8, 1000), (1, 512), (16, 2048)])
+def test_reduce_sweep(op, shape):
+    x = _arr(shape)
+    with ops.backend("pallas_interpret"):
+        got = ops.reduce(op, x)
+    want = ref.reduce(op, x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# Convolution + stencils (paper kernels)
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("ksize", [3, 5, 7])
+def test_conv2d_sweep(ksize):
+    img = _arr((64, 96))
+    ker = _arr((ksize, ksize))
+    with ops.backend("pallas_interpret"):
+        got = ops.conv2d(img, ker, strip_rows=17)
+    want = ref.conv2d(img, ker)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", [(300,), (40, 50), (12, 14, 16)])
+def test_laplace_sweep(shape):
+    x = _arr(shape)
+    with ops.backend("pallas_interpret"):
+        got = ops.laplace(x)
+    want = ref.laplace(x)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_diffusion_stencil():
+    x = _arr((48, 48))
+    out = ref.diffusion(x)
+    assert out.shape == (44, 44)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+# ----------------------------------------------------------------------
+# Attention
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("hq,hkv,sq,skv", [(4, 2, 128, 128), (8, 8, 128, 256),
+                                           (4, 1, 256, 256)])
+def test_flash_attention_sweep(hq, hkv, sq, skv):
+    q = _arr((2, hq, sq, 64), scale=0.2)
+    k = _arr((2, hkv, skv, 64), scale=0.2)
+    v = _arr((2, hkv, skv, 64))
+    with ops.backend("pallas_interpret"):
+        got = ops.attention(q, k, v, causal=True)
+    want = ref.mha(q, k, v, causal=True, q_offset=skv - sq)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=2e-3)
+
+
+def test_flash_decode_with_partial_cache():
+    q = _arr((2, 4, 8, 64), scale=0.2)
+    k = _arr((2, 2, 512, 64), scale=0.2)
+    v = _arr((2, 2, 512, 64))
+    with ops.backend("pallas_interpret"):
+        got = ops.attention(q, k, v, causal=True, kv_len=300)
+    want = ref.mha(q, k, v, causal=True, q_offset=300 - 8)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=2e-3)
+
+
+def test_blocked_attention_matches_naive():
+    q = _arr((2, 4, 512, 32), scale=0.2)
+    k = _arr((2, 2, 2048, 32), scale=0.2)
+    v = _arr((2, 2, 2048, 32))
+    got = ref.mha_blocked(q, k, v, causal=True, q_offset=2048 - 512)
+    want = ref.mha(q, k, v, causal=True, q_offset=2048 - 512)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_blocked_attention_custom_vjp():
+    """Flash backward must match autodiff through the naive reference."""
+    q = _arr((1, 2, 128, 16), scale=0.3)
+    k = _arr((1, 1, 1024, 16), scale=0.3)
+    v = _arr((1, 1, 1024, 16))
+
+    def f_blocked(q, k, v):
+        return (ref.mha_blocked(q, k, v, causal=True,
+                                q_offset=1024 - 128) ** 2).sum()
+
+    def f_naive(q, k, v):
+        return (ref.mha(q, k, v, causal=True, q_offset=1024 - 128) ** 2).sum()
+
+    g1 = jax.grad(f_blocked, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_naive, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# SSD scan
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("l,chunk", [(128, 32), (64, 64), (96, 16)])
+def test_ssd_sweep(l, chunk):
+    b, h, dh, n = 2, 3, 16, 32
+    x = _arr((b, l, h, dh))
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, l, h)).astype(np.float32))
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, (h,)).astype(np.float32))
+    B = _arr((b, l, n), scale=0.3)
+    C = _arr((b, l, n), scale=0.3)
+    with ops.backend("pallas_interpret"):
+        got = ops.ssd(x, dt, A, B, C, chunk=chunk)
+    want = ref.ssd_scan(x, dt, A, B, C)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_chunked_with_state_matches_sequential():
+    b, l, h, dh, n = 1, 64, 2, 8, 16
+    x = _arr((b, l, h, dh))
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, l, h)).astype(np.float32))
+    A = jnp.asarray(-RNG.uniform(0.5, 2.0, (h,)).astype(np.float32))
+    B = _arr((b, l, n), scale=0.3)
+    C = _arr((b, l, n), scale=0.3)
+    y1, s1 = ref.ssd_scan_chunked_with_state(x, dt, A, B, C, chunk=16)
+    # final state from an explicit sequential scan
+    y2 = ref.ssd_scan(x, dt, A, B, C)
+    np.testing.assert_allclose(y1, y2, rtol=1e-3, atol=1e-3)
+    # state consistency: decoding one more token from s1 matches a longer scan
+    assert s1.shape == (b, h, n, dh)
+    assert np.isfinite(np.asarray(s1)).all()
+
+
+# ----------------------------------------------------------------------
+# Fused optimizer
+# ----------------------------------------------------------------------
+def test_adamw_fused_matches_ref():
+    p = _arr((33, 45))
+    g = _arr((33, 45))
+    m = jnp.zeros_like(p)
+    v = jnp.zeros_like(p)
+    with ops.backend("pallas_interpret"):
+        got = ops.adamw_update(p, g, m, v, 3, lr=1e-3)
+    want = ref.adamw_update(p, g, m, v, 3, 1e-3)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,80 @@
+"""Validation of the paper's own claims against our perf/energy model
+(EXPERIMENTS.md §Paper-validation reads from these assertions)."""
+import math
+
+import pytest
+
+from repro.core.cluster import PAPER_CLUSTER
+from repro.perfmodel import dnn, ntx
+
+
+def test_table1_figures_of_merit():
+    t = ntx.table1_figures()
+    assert t["peak_gflops"] == pytest.approx(20.0)        # 8 NTX @ 1.25 GHz
+    assert t["peak_bw_gbs"] == pytest.approx(5.0)         # 64-bit AXI @ 625M
+    assert t["practical_gflops"] == pytest.approx(17.4)   # 13% stall
+    assert t["efficiency_gflops_per_w"] == pytest.approx(108, rel=0.01)
+    assert t["pj_per_flop"] == pytest.approx(9.3, rel=0.01)
+
+
+def test_87_percent_peak_claim():
+    """'NTX can consistently achieve up to 87% of its peak performance'."""
+    assert ntx.peak_utilization_bound() == pytest.approx(0.87)
+    pts = ntx.figure5_suite()
+    best = max(p.gflops for p in pts.values())
+    assert best <= 0.87 * 20.0 * 1.001
+    assert best >= 0.85 * 20.0          # and the bound is achieved (GEMM)
+
+
+def test_fig5_kernel_regimes():
+    """AXPY/GEMV/LAP memory-bound near max bandwidth; GEMM/CONV compute-
+    bound near practical peak (paper §III-C)."""
+    pts = ntx.figure5_suite()
+    bw_cap = PAPER_CLUSTER.practical_bw / 1e9
+    assert pts["AXPY 4194304"].bw_gbs == pytest.approx(bw_cap, rel=0.02)
+    assert pts["LAP1D"].bw_gbs == pytest.approx(bw_cap, rel=0.02)
+    assert pts["GEMM 1024"].gflops == pytest.approx(17.4, rel=0.02)
+    for ks in (3, 5, 7):
+        assert pts[f"CONV {ks}x{ks}"].gflops > 16.5       # compute bound
+    # memory-bound kernels stay well below peak compute
+    assert pts["AXPY 4194304"].gflops < 1.0
+    assert pts["GEMV 16384"].gflops < 2.0
+
+
+def test_table2_reproduction():
+    """Geomean training efficiencies across all 9 NTX configs within 25%
+    of the published table (3 anchors calibrated, 6 cells validation)."""
+    pm = dnn.calibrate()
+    rows = dnn.table2(pm)
+    errs = [r["rel_err"] for r in rows]
+    assert max(errs) < 0.25, rows
+    assert sum(errs) / len(errs) < 0.12
+
+
+def test_gpu_ratio_headlines():
+    """Paper: 2.5x (22nm) / 3x (14nm) energy efficiency over GPUs;
+    6.5x / 10.4x area efficiency."""
+    r = dnn.gpu_comparison()
+    assert 2.2 < r["energy_ratio_22nm"] < 3.2
+    assert 2.4 < r["energy_ratio_14nm"] < 3.6
+    assert 5.5 < r["area_ratio_22nm"] < 7.5
+    assert 9.0 < r["area_ratio_14nm"] < 12.0
+
+
+def test_multi_cluster_peaks_match_table2():
+    from repro.core.cluster import ntx_multi_cluster
+    assert ntx_multi_cluster(16, 22)["peak_flops"] == pytest.approx(0.640e12)
+    assert ntx_multi_cluster(64, 14)["peak_flops"] == pytest.approx(1.920e12)
+
+
+def test_wide_accumulator_rmse_claim():
+    """§II-C: PCS accumulator beats a conventional fp32 FPU on RMSE.
+
+    The paper reports 1.7x on a real conv layer; on synthetic data the
+    ratio is larger — we assert the direction and a conservative margin,
+    and that Kahan (our TPU fp32 path) captures most of the benefit."""
+    from repro.core.precision import conv_layer_rmse_study
+    r = conv_layer_rmse_study(n_outputs=48)
+    assert r["ratio_naive_over_pcs"] > 1.7
+    assert r["ratio_naive_over_kahan"] > 1.7
+    assert r["rmse_pcs"] <= r["rmse_kahan"] * 1.05
