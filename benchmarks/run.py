@@ -19,7 +19,12 @@ import numpy as np
 
 
 def _t(fn, *args, reps=3, **kw):
-    fn(*args, **kw)                      # warmup/compile
+    r = fn(*args, **kw)                  # warmup/compile
+    try:
+        import jax
+        jax.block_until_ready(r)         # keep compile out of the timed loop
+    except Exception:
+        pass
     t0 = time.perf_counter()
     for _ in range(reps):
         r = fn(*args, **kw)
@@ -101,6 +106,78 @@ def bench_kernels():
         print(f"kernels.gemm_128_pallas_interpret,{us:.1f},1")
 
 
+def bench_fusion():
+    """Fused command-stream execution vs. per-descriptor dispatch.
+
+    Rows: a 3-op elementwise chain and a GEMM+bias+ReLU, each fused vs.
+    unfused, with the bytes each plan moves (derived column) so the perf
+    trajectory of the fusion subsystem is tracked from this PR onward.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import Agu, CommandStream, Descriptor, Opcode
+    from repro.core.dispatch import dispatch
+    from repro.kernels import ops, ref
+    rng = np.random.default_rng(0)
+
+    # --- 3-op elementwise chain over a 1M-element stream -------------
+    n = 1 << 20
+    mem = jnp.asarray(rng.standard_normal(2 * n).astype(np.float32))
+    chain = [
+        Descriptor(bounds=(n,), opcode=Opcode.THRESH, imm=0.2,
+                   agu0=Agu(0, (1,)), agu2=Agu(n, (1,))),
+        Descriptor(bounds=(n,), opcode=Opcode.RELU,
+                   agu0=Agu(n, (1,)), agu2=Agu(n, (1,))),
+        Descriptor(bounds=(n,), opcode=Opcode.THRESH, imm=0.5,
+                   agu0=Agu(n, (1,)), agu2=Agu(n, (1,))),
+    ]
+    cs = CommandStream(chain)
+
+    def run_fused(m):
+        return cs.execute(m)
+
+    def run_seq(m):
+        for d in chain:
+            m = dispatch(d, m)
+        return m
+
+    us_f = _t(run_fused, mem, reps=5)
+    us_s = _t(run_seq, mem, reps=5)
+    print(f"fusion.chain3.fused,{us_f:.1f},{cs.bytes_moved()}")
+    print(f"fusion.chain3.unfused,{us_s:.1f},{cs.bytes_sequential()}")
+    print(f"fusion.chain3.speedup,{us_f:.1f},{us_s / max(us_f, 1e-9):.3f}")
+
+    # --- GEMM + bias + ReLU epilogue ---------------------------------
+    m_ = 512
+    a = jnp.asarray(rng.standard_normal((m_, m_)).astype(np.float32))
+    b = jnp.asarray(rng.standard_normal((m_, m_)).astype(np.float32))
+    bias = jnp.asarray(rng.standard_normal(m_).astype(np.float32))
+    fused = jax.jit(lambda a, b, v: ops.gemm(
+        a, b, epilogue=[("bias", v), ("relu",)]))
+    g_j = jax.jit(ref.gemm)
+    add_j = jax.jit(lambda c, v: c + v[None])
+    relu_j = jax.jit(lambda c: jnp.maximum(c, 0.0))
+
+    def unfused(a, b, v):
+        # one jitted call per command: each result takes an HBM round trip,
+        # like per-descriptor dispatch
+        return relu_j(add_j(g_j(a, b), v))
+
+    us_f = _t(fused, a, b, bias, reps=5)
+    us_s = _t(unfused, a, b, bias, reps=5)
+    ep_bytes_fused = 4 * (3 * m_ * m_ + m_)                 # A,B in; C out; bias
+    ep_bytes_seq = 4 * (3 * m_ * m_ + m_ + 4 * m_ * m_)     # + 2 extra C trips
+    print(f"fusion.gemm_bias_relu.fused,{us_f:.1f},{ep_bytes_fused}")
+    print(f"fusion.gemm_bias_relu.unfused,{us_s:.1f},{ep_bytes_seq}")
+    print(f"fusion.gemm_bias_relu.speedup,{us_f:.1f},"
+          f"{us_s / max(us_f, 1e-9):.3f}")
+
+    # --- analytical NTX-cluster pricing of the same chain ------------
+    from repro.perfmodel.ntx import stream_fusion_gain
+    g = stream_fusion_gain(chain)
+    print(f"fusion.chain3.model_speedup,0,{g['speedup']:.3f}")
+
+
 def bench_roofline():
     import os
     d = "results/dryrun"
@@ -125,6 +202,7 @@ SECTIONS = {
     "fig6_7": bench_fig6_7,
     "precision": bench_precision,
     "kernels": bench_kernels,
+    "fusion": bench_fusion,
     "roofline": bench_roofline,
 }
 

@@ -15,7 +15,8 @@ from .scheduler import (TileSchedule, Tile, schedule_axpy, schedule_gemv,
                         schedule_gemm, schedule_conv2d, schedule_stencil,
                         pick_matmul_blocks)
 from . import precision
-from .dispatch import dispatch
+from .dispatch import dispatch, dispatch_stream
+from .stream import CommandStream, plan_stream
 
 __all__ = [
     "Agu", "Descriptor", "Opcode", "axpy", "gemv", "gemm", "memcpy",
@@ -25,5 +26,6 @@ __all__ = [
     "NtxClusterSpec", "TpuChipSpec", "PAPER_CLUSTER", "TPU_V5E",
     "TileSchedule", "Tile", "schedule_axpy", "schedule_gemv",
     "schedule_gemm", "schedule_conv2d", "schedule_stencil",
-    "pick_matmul_blocks", "precision", "dispatch",
+    "pick_matmul_blocks", "precision", "dispatch", "dispatch_stream",
+    "CommandStream", "plan_stream",
 ]

@@ -100,3 +100,15 @@ def dispatch(desc: Descriptor, mem: jnp.ndarray) -> jnp.ndarray:
 
     # no blocked kernel for this nest: functional engine fallback
     return jnp.asarray(engine.execute_vectorized(desc, np.asarray(mem)))
+
+
+def dispatch_stream(descs, mem: jnp.ndarray) -> jnp.ndarray:
+    """Execute an ordered descriptor stream with command fusion.
+
+    Compatible runs (elementwise chains, GEMM + epilogue commands) execute
+    as single fused kernels — operands stay resident between commands like
+    the paper's TCDM (§II-E) — with per-descriptor :func:`dispatch` as the
+    fallback when fusion is illegal. See ``repro.core.stream``.
+    """
+    from .stream import CommandStream
+    return CommandStream(descs).execute(mem)

@@ -1,0 +1,41 @@
+"""Version compatibility for the shard_map family of APIs.
+
+Newer jax exports ``jax.shard_map`` (with ``check_vma``) and
+``jax.lax.pcast``; 0.4.x only has ``jax.experimental.shard_map.shard_map``
+(with ``check_rep``) and no pcast. Callers import ``shard_map`` and
+``pcast_varying`` from here and get identical semantics on both.
+"""
+from __future__ import annotations
+
+import jax
+
+try:                                        # jax >= 0.5 top-level export
+    from jax import shard_map as _native_shard_map
+    _LEGACY = False
+except ImportError:                         # jax 0.4.x experimental location
+    from jax.experimental.shard_map import shard_map as _native_shard_map
+    _LEGACY = True
+
+
+def shard_map(f, **kwargs):
+    """``jax.shard_map`` with the modern kwarg surface on any jax version."""
+    if _LEGACY:
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        else:
+            # the legacy replication checker predates several collectives
+            # used in this package (ppermute rings, psum_scatter): disable
+            # it rather than translate every call site
+            kwargs.setdefault("check_rep", False)
+    return _native_shard_map(f, **kwargs)
+
+
+def pcast_varying(x, axis_name):
+    """``jax.lax.pcast(x, axis_name, to="varying")`` where it exists.
+
+    On legacy jax the varying/replicated distinction is only a static check
+    (disabled above), so the cast is an identity.
+    """
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, axis_name, to="varying")
+    return x

@@ -14,7 +14,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+
+from .compat import pcast_varying, shard_map
 
 
 def gpipe(body: Callable, axis_name: str):
@@ -35,7 +36,7 @@ def gpipe(body: Callable, axis_name: str):
         perm = [(i, i + 1) for i in range(n_stage - 1)]
 
         total = n_micro + n_stage - 1
-        ys = jax.lax.pcast(jnp.zeros_like(xs), axis_name, to="varying")
+        ys = pcast_varying(jnp.zeros_like(xs), axis_name)
 
         def step(t, carry):
             cur, ys = carry                      # cur: activation entering
@@ -57,8 +58,7 @@ def gpipe(body: Callable, axis_name: str):
             cur = jax.lax.ppermute(y, axis_name, perm) if n_stage > 1 else y
             return cur, ys
 
-        cur = jax.lax.pcast(jnp.zeros(mb_shape, xs.dtype), axis_name,
-                            to="varying")
+        cur = pcast_varying(jnp.zeros(mb_shape, xs.dtype), axis_name)
         cur, ys = jax.lax.fori_loop(0, total, step, (cur, ys))
         # results live on the last stage only; broadcast to all stages
         return jax.lax.psum(ys, axis_name)

@@ -1,0 +1,15 @@
+"""Version compatibility shims for the Pallas TPU API.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` (and
+back-compat aliases differ across 0.4.x releases). Resolve the name once
+here; every kernel in this package imports ``CompilerParams`` from this
+module instead of touching ``pltpu`` directly.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+if hasattr(pltpu, "CompilerParams"):
+    CompilerParams = pltpu.CompilerParams
+else:  # jax <= 0.4.x spells it TPUCompilerParams
+    CompilerParams = pltpu.TPUCompilerParams

@@ -18,8 +18,34 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import compat
+
 _OPS1 = {"relu", "thresh", "copy", "set"}
 _OPS2 = {"axpy", "add", "sub", "mul", "mask"}
+
+
+def _apply_op(op: str, x, y, imm: float):
+    """One streaming command applied to in-register values."""
+    imm = jnp.asarray(imm, x.dtype)
+    if op == "axpy":
+        return imm * x + y
+    if op == "add":
+        return x + y
+    if op == "sub":
+        return x - y
+    if op == "mul":
+        return x * y
+    if op == "mask":
+        return jnp.where(y != 0, x, jnp.zeros_like(x))
+    if op == "relu":
+        return jnp.maximum(x, 0)
+    if op == "thresh":
+        return jnp.where(x > imm, x, jnp.zeros_like(x))
+    if op == "copy":
+        return x
+    if op == "set":
+        return jnp.full_like(x, imm)
+    raise ValueError(op)
 
 
 def _ew_kernel(*refs, op: str, imm: float):
@@ -29,27 +55,7 @@ def _ew_kernel(*refs, op: str, imm: float):
     else:
         x_ref, o_ref = refs
         x, y = x_ref[...], None
-    imm = jnp.asarray(imm, x.dtype)
-    if op == "axpy":
-        o_ref[...] = imm * x + y
-    elif op == "add":
-        o_ref[...] = x + y
-    elif op == "sub":
-        o_ref[...] = x - y
-    elif op == "mul":
-        o_ref[...] = x * y
-    elif op == "mask":
-        o_ref[...] = jnp.where(y != 0, x, jnp.zeros_like(x))
-    elif op == "relu":
-        o_ref[...] = jnp.maximum(x, 0)
-    elif op == "thresh":
-        o_ref[...] = jnp.where(x > imm, x, jnp.zeros_like(x))
-    elif op == "copy":
-        o_ref[...] = x
-    elif op == "set":
-        o_ref[...] = jnp.full_like(x, imm)
-    else:
-        raise ValueError(op)
+    o_ref[...] = _apply_op(op, x, y, imm)
 
 
 def elementwise_pallas(op: str, x: jnp.ndarray, y: jnp.ndarray | None = None,
@@ -72,7 +78,57 @@ def elementwise_pallas(op: str, x: jnp.ndarray, y: jnp.ndarray | None = None,
         in_specs=in_specs,
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(*args)
+
+
+# ----------------------------------------------------------------------
+# Chain compiler: a fused sequence of streaming commands in ONE pass
+# ----------------------------------------------------------------------
+def _chain_kernel(*refs, stages, n_ys: int):
+    """refs: (x_ref, y_ref_0..y_ref_{n_ys-1}, o_ref). ``stages`` is a static
+    tuple of (op, imm); 2-read stages consume the next y_ref in order. The
+    carried value stays in registers between stages — the VMEM-resident
+    analogue of the paper's TCDM-resident operand chain (§II-E)."""
+    x_ref = refs[0]
+    y_refs = refs[1:1 + n_ys]
+    o_ref = refs[1 + n_ys]
+    val = x_ref[...]
+    yi = 0
+    for op, imm in stages:
+        y = None
+        if op in _OPS2:
+            y = y_refs[yi][...]
+            yi += 1
+        val = _apply_op(op, val, y, imm)
+    o_ref[...] = val
+
+
+def elementwise_chain_pallas(stages, x: jnp.ndarray,
+                             ys: tuple = (), block: int = 1024,
+                             interpret: bool = False) -> jnp.ndarray:
+    """Fused chain over a 2-D (rows, n) array: one read of ``x``, one read
+    per external operand, one write — no intermediate HBM round trips.
+
+    ``stages``: sequence of (op, imm); ops from the NTX streaming command
+    set. ``ys``: one (rows, n) array per 2-read stage, in stage order.
+    """
+    stages = tuple((str(op), float(imm)) for op, imm in stages)
+    n_ys = sum(1 for op, _ in stages if op in _OPS2)
+    assert len(ys) == n_ys, (len(ys), n_ys)
+    rows, n = x.shape
+    assert n % block == 0, (n, block)
+    spec = pl.BlockSpec((rows, block), lambda i: (0, i))
+    args = (x,) + tuple(ys)
+    return pl.pallas_call(
+        functools.partial(_chain_kernel, stages=stages, n_ys=n_ys),
+        grid=(n // block,),
+        in_specs=[spec] * len(args),
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(*args)
@@ -112,7 +168,7 @@ def adamw_pallas(p, g, m, v, step, *, lr, b1=0.9, b2=0.999, eps=1e-8,
         out_shape=(jax.ShapeDtypeStruct((rows, n), p.dtype),
                    jax.ShapeDtypeStruct((rows, n), jnp.float32),
                    jax.ShapeDtypeStruct((rows, n), jnp.float32)),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(p, g, m.astype(jnp.float32), v.astype(jnp.float32), bc)

@@ -24,8 +24,55 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import compat
 
-def _gemm_kernel(a_ref, b_ref, c_ref, acc_ref, *, nk: int, out_dtype):
+
+#: Epilogue stage kinds that carry a streamed array operand (in order).
+EPILOGUE_ARRAY_KINDS = ("bias", "residual", "mul")
+#: All supported epilogue kinds.
+EPILOGUE_KINDS = EPILOGUE_ARRAY_KINDS + ("scale", "relu", "thresh",
+                                         "silu", "gelu")
+
+
+def apply_epilogue(acc, stages, operands):
+    """Apply fused epilogue stages to the fp32 accumulator.
+
+    ``stages``: static tuple of (kind, imm). ``operands``: one array (or
+    ref-loaded block) per array kind, in stage order. Runs inside the
+    kernel's store step — the exact point the descriptor's store_level
+    rounds and writes back, so the whole epilogue costs zero extra HBM
+    round trips.
+    """
+    i = 0
+    for kind, imm in stages:
+        if kind == "bias":           # + row vector broadcast over rows
+            acc = acc + operands[i].astype(jnp.float32)
+            i += 1
+        elif kind == "residual":     # + full matrix
+            acc = acc + operands[i].astype(jnp.float32)
+            i += 1
+        elif kind == "mul":          # * full matrix (e.g. a gate)
+            acc = acc * operands[i].astype(jnp.float32)
+            i += 1
+        elif kind == "scale":
+            acc = acc * jnp.float32(imm)
+        elif kind == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        elif kind == "thresh":
+            acc = jnp.where(acc > jnp.float32(imm), acc, 0.0)
+        elif kind == "silu":
+            acc = acc * jax.nn.sigmoid(acc)
+        elif kind == "gelu":
+            acc = jax.nn.gelu(acc)
+        else:
+            raise ValueError(kind)
+    return acc
+
+
+def _gemm_kernel(a_ref, b_ref, *rest, nk: int, out_dtype, stages=(),
+                 n_ep: int = 0):
+    ep_refs = rest[:n_ep]
+    c_ref, acc_ref = rest[n_ep], rest[n_ep + 1]
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -38,11 +85,15 @@ def _gemm_kernel(a_ref, b_ref, c_ref, acc_ref, *, nk: int, out_dtype):
 
     @pl.when(k == nk - 1)
     def _store():                      # descriptor store_level: one rounding
-        c_ref[...] = acc_ref[...].astype(out_dtype)
+        acc = apply_epilogue(acc_ref[...], stages,
+                             [r[...] for r in ep_refs])
+        c_ref[...] = acc.astype(out_dtype)
 
 
-def _gemm_kernel_kahan(a_ref, b_ref, c_ref, acc_ref, comp_ref, *, nk: int,
-                       out_dtype):
+def _gemm_kernel_kahan(a_ref, b_ref, *rest, nk: int, out_dtype, stages=(),
+                       n_ep: int = 0):
+    ep_refs = rest[:n_ep]
+    c_ref, acc_ref, comp_ref = rest[n_ep], rest[n_ep + 1], rest[n_ep + 2]
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -59,15 +110,24 @@ def _gemm_kernel_kahan(a_ref, b_ref, c_ref, acc_ref, comp_ref, *, nk: int,
 
     @pl.when(k == nk - 1)
     def _store():
-        c_ref[...] = (acc_ref[...] + comp_ref[...]).astype(out_dtype)
+        acc = apply_epilogue(acc_ref[...] + comp_ref[...], stages,
+                             [r[...] for r in ep_refs])
+        c_ref[...] = acc.astype(out_dtype)
 
 
 def gemm_pallas(a: jnp.ndarray, b: jnp.ndarray, *,
                 block_m: int = 128, block_n: int = 128, block_k: int = 128,
                 out_dtype=jnp.float32, compensated: bool = False,
+                epilogue=None,
                 interpret: bool = False) -> jnp.ndarray:
-    """C[m,n] = A[m,k] @ B[k,n]. Dims must divide the block sizes
-    (``repro.kernels.ops.gemm`` pads arbitrary shapes)."""
+    """C[m,n] = epilogue(A[m,k] @ B[k,n]). Dims must divide the block sizes
+    (``repro.kernels.ops.gemm`` pads arbitrary shapes).
+
+    ``epilogue``: sequence of (kind, imm, operand) stages applied to the
+    fp32 accumulator at the final k-step, before the single rounding write.
+    Array operands: ``bias`` takes a (1, n) row vector, ``residual``/``mul``
+    take (m, n) matrices.
+    """
     m, kdim = a.shape
     k2, n = b.shape
     assert kdim == k2, (a.shape, b.shape)
@@ -76,22 +136,40 @@ def gemm_pallas(a: jnp.ndarray, b: jnp.ndarray, *,
     nk = kdim // block_k
     grid = (m // block_m, n // block_n, nk)
 
+    epilogue = tuple(epilogue or ())
+    stages = tuple((kind, float(imm)) for kind, imm, _ in epilogue)
+    ep_args, ep_specs = [], []
+    for kind, _, operand in epilogue:
+        if kind not in EPILOGUE_ARRAY_KINDS:
+            continue
+        if kind == "bias":
+            assert operand.shape == (1, n), (kind, operand.shape)
+            ep_specs.append(pl.BlockSpec((1, block_n),
+                                         lambda i, j, k: (0, j)))
+        else:
+            assert operand.shape == (m, n), (kind, operand.shape)
+            ep_specs.append(pl.BlockSpec((block_m, block_n),
+                                         lambda i, j, k: (i, j)))
+        ep_args.append(operand)
+
     kern = _gemm_kernel_kahan if compensated else _gemm_kernel
     scratch = [pltpu.VMEM((block_m, block_n), jnp.float32)]
     if compensated:
         scratch.append(pltpu.VMEM((block_m, block_n), jnp.float32))
 
     return pl.pallas_call(
-        functools.partial(kern, nk=nk, out_dtype=out_dtype),
+        functools.partial(kern, nk=nk, out_dtype=out_dtype, stages=stages,
+                          n_ep=len(ep_args)),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),  # AGU0
             pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),  # AGU1
+            *ep_specs,
         ],
         out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),  # AGU2
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=scratch,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
-    )(a, b)
+    )(a, b, *ep_args)

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import compat
+
 _INIT = {"sum": 0.0, "min": float("inf"), "max": float("-inf"),
          "argmin": float("inf"), "argmax": float("-inf")}
 
@@ -73,7 +75,7 @@ def reduce_pallas(op: str, x: jnp.ndarray, block: int = 512,
         out_shape=jax.ShapeDtypeStruct((rows, 1), out_dtype),
         scratch_shapes=[pltpu.VMEM((rows, 1), jnp.float32),
                         pltpu.VMEM((rows, 1), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(x)

@@ -19,8 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import ref
-from .ntx_gemm import gemm_pallas
-from .ntx_elementwise import elementwise_pallas, adamw_pallas
+from .ntx_gemm import EPILOGUE_ARRAY_KINDS, gemm_pallas
+from .ntx_elementwise import (_OPS2, adamw_pallas, elementwise_chain_pallas,
+                              elementwise_pallas)
 from .ntx_reduce import reduce_pallas
 from .ntx_conv import conv2d_pallas
 from .ntx_stencil import stencil1d_pallas
@@ -71,26 +72,156 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0):
 
 
 # ----------------------------------------------------------------------
+# GEMM block autotuning: scheduler-derived sizes, cached per shape
+# ----------------------------------------------------------------------
+_BLOCK_CACHE: dict = {}
+_BLOCK_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _align_up(x: int, mult: int) -> int:
+    return max(mult, -(-x // mult) * mult)
+
+
+def matmul_blocks(m: int, n: int, k: int,
+                  dtype_bytes: int = 4) -> tuple[int, int, int]:
+    """(bm, bn, bk) for an (m, n, k) matmul, from the double-buffer tile
+    scheduler's VMEM sizing (``scheduler.pick_matmul_blocks``), aligned to
+    the TPU tiling the kernels assume (sublane 8 / lane 128) and cached
+    per shape — the autotune cache. Wrappers pad operands up to the block
+    multiples, so alignment never exceeds the old padding behaviour."""
+    key = (m, n, k, dtype_bytes)
+    hit = _BLOCK_CACHE.get(key)
+    if hit is not None:
+        _BLOCK_CACHE_STATS["hits"] += 1
+        return hit
+    _BLOCK_CACHE_STATS["misses"] += 1
+    from repro.core.scheduler import pick_matmul_blocks
+    bm, bn, bk = pick_matmul_blocks(m, n, k, dtype_bytes=dtype_bytes)
+    blocks = (_align_up(bm, 8), _align_up(bn, 128), _align_up(bk, 128))
+    _BLOCK_CACHE[key] = blocks
+    return blocks
+
+
+def block_cache_stats() -> dict:
+    return dict(_BLOCK_CACHE_STATS)
+
+
+def _norm_epilogue(epilogue):
+    """Normalize user stages to (kind, imm, operand) triples."""
+    out = []
+    for stage in epilogue or ():
+        if isinstance(stage, str):
+            stage = (stage,)
+        kind = stage[0]
+        if kind in EPILOGUE_ARRAY_KINDS:
+            operand = stage[1]
+            out.append((kind, 0.0, jnp.asarray(operand)))
+        elif kind in ("scale", "thresh"):
+            out.append((kind, float(stage[1]), None))
+        else:
+            out.append((kind, 0.0, None))
+    return out
+
+
+def _ref_epilogue(c: jnp.ndarray, epilogue) -> jnp.ndarray:
+    """Oracle for the fused epilogue: fp32, same stage order."""
+    c = c.astype(jnp.float32)
+    for kind, imm, operand in epilogue:
+        if kind == "bias":
+            c = c + operand.reshape(1, -1).astype(jnp.float32)
+        elif kind == "residual":
+            c = c + operand.astype(jnp.float32)
+        elif kind == "mul":
+            c = c * operand.astype(jnp.float32)
+        elif kind == "scale":
+            c = c * jnp.float32(imm)
+        elif kind == "relu":
+            c = jnp.maximum(c, 0.0)
+        elif kind == "thresh":
+            c = jnp.where(c > jnp.float32(imm), c, 0.0)
+        elif kind == "silu":
+            c = jax.nn.silu(c)
+        elif kind == "gelu":
+            c = jax.nn.gelu(c)
+        else:
+            raise ValueError(kind)
+    return c
+
+
+# ----------------------------------------------------------------------
 # GEMM
 # ----------------------------------------------------------------------
 def gemm(a: jnp.ndarray, b: jnp.ndarray, out_dtype=jnp.float32,
-         compensated: bool = False) -> jnp.ndarray:
-    """C = A @ B, fp32 accumulate, arbitrary shapes."""
+         compensated: bool = False, epilogue=None) -> jnp.ndarray:
+    """C = epilogue(A @ B), fp32 accumulate, arbitrary shapes.
+
+    ``epilogue``: optional fused stages applied to the accumulator at the
+    store step (one rounding, zero extra HBM round trips): ("bias", vec),
+    ("residual", mat), ("mul", mat), ("scale", s), ("thresh", t), "relu",
+    "silu", "gelu".
+    """
+    epilogue = _norm_epilogue(epilogue)
     if not _pallas():
-        return ref.gemm(a, b, out_dtype)
+        c = ref.gemm(a, b, jnp.float32)
+        return _ref_epilogue(c, epilogue).astype(out_dtype)
     m, k = a.shape
     _, n = b.shape
-    bm = 128 if m >= 128 else 8 * max(1, (m + 7) // 8)
-    bn = 128 if n >= 128 else 128
-    bk = 128 if k >= 128 else 128
+    bm, bn, bk = matmul_blocks(m, n, k)
+    bm, bn, bk = min(bm, _align_up(m, 8)), min(bn, _align_up(n, 128)), \
+        min(bk, _align_up(k, 128))
     a2, m0 = _pad_to(a, 0, bm)
     a2, k0 = _pad_to(a2, 1, bk)
     b2, _ = _pad_to(b, 0, bk)
     b2, n0 = _pad_to(b2, 1, bn)
+    ep = []
+    for kind, imm, operand in epilogue:
+        if kind == "bias":
+            op2, _ = _pad_to(operand.reshape(1, -1), 1, bn)
+        elif kind in ("residual", "mul"):
+            op2, _ = _pad_to(operand, 0, bm)
+            op2, _ = _pad_to(op2, 1, bn)
+        else:
+            op2 = None
+        ep.append((kind, imm, op2))
     c = gemm_pallas(a2, b2, block_m=bm, block_n=bn, block_k=bk,
                     out_dtype=out_dtype, compensated=compensated,
-                    interpret=_interp())
+                    epilogue=ep, interpret=_interp())
     return c[:m0, :n0]
+
+
+# ----------------------------------------------------------------------
+# Fused transformer MLP: activations/gate/residual as GEMM epilogues
+# ----------------------------------------------------------------------
+def fused_mlp(x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray,
+              w3: jnp.ndarray | None = None, act: str = "gelu",
+              residual: jnp.ndarray | None = None) -> jnp.ndarray:
+    """``(residual +) (act(x @ w1) [* (x @ w3)]) @ w2`` for (..., d) inputs.
+
+    On the Pallas backends the activation, SwiGLU gate multiply, and the
+    residual add all run inside the GEMM store steps (fused epilogues); on
+    the ref backend the math is the plain-jnp form the models used before,
+    bit-for-bit.
+    """
+    if not _pallas():
+        if act == "swiglu":
+            h = jax.nn.silu(x @ w1) * (x @ w3)
+        else:
+            h = jax.nn.gelu(x @ w1)
+        out = h @ w2
+        return out if residual is None else residual + out
+    dt = x.dtype
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if act == "swiglu":
+        gate = gemm(x2, w3, out_dtype=jnp.float32)
+        h = gemm(x2, w1, out_dtype=dt, epilogue=[("silu",), ("mul", gate)])
+    else:
+        h = gemm(x2, w1, out_dtype=dt, epilogue=[("gelu",)])
+    ep = []
+    if residual is not None:
+        ep.append(("residual", residual.reshape(-1, w2.shape[-1])))
+    out = gemm(h, w2, out_dtype=dt, epilogue=ep)
+    return out.reshape(*lead, w2.shape[-1])
 
 
 # ----------------------------------------------------------------------
@@ -114,6 +245,38 @@ def elementwise(op: str, x: jnp.ndarray, y: jnp.ndarray | None = None,
 
 def axpy(a: float, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     return elementwise("axpy", x, y, imm=a)
+
+
+def elementwise_chain(stages, x: jnp.ndarray, ys=()) -> jnp.ndarray:
+    """Fused chain of streaming commands: one pass over ``x``.
+
+    ``stages``: sequence of (op, imm). Each 2-read op consumes the next
+    array from ``ys``. Equivalent to folding ``elementwise`` over the
+    stages, but the value never leaves registers between stages.
+    """
+    stages = tuple((str(op), float(imm)) for op, imm in stages)
+    ys = tuple(ys)
+    if not _pallas():
+        val = x
+        yi = 0
+        for op, imm in stages:
+            y = None
+            if op in _OPS2:
+                y = ys[yi]
+                yi += 1
+            val = ref.elementwise(op, val, y, imm)
+        return val
+    shape = x.shape
+    flat = x.reshape(1, -1)
+    block = 1024 if flat.shape[1] >= 1024 else 128
+    xf, n0 = _pad_to(flat, 1, block)
+    yfs = []
+    for y in ys:
+        yf, _ = _pad_to(y.reshape(1, -1), 1, block)
+        yfs.append(yf)
+    out = elementwise_chain_pallas(stages, xf, tuple(yfs), block=block,
+                                   interpret=_interp())
+    return out[:, :n0].reshape(shape)
 
 
 # ----------------------------------------------------------------------
@@ -187,6 +350,16 @@ def laplace(x: jnp.ndarray) -> jnp.ndarray:
 # ----------------------------------------------------------------------
 # Attention
 # ----------------------------------------------------------------------
+def _flash_block(n: int, cap: int) -> int:
+    """Largest 8-aligned b <= cap with n % b == 0 (the flash kernel needs
+    exact divisibility and Mosaic needs sublane-aligned blocks). Returns 0
+    when no such block exists (caller falls back to the ref path)."""
+    for b in range(min(cap, n), 7, -1):
+        if b % 8 == 0 and n % b == 0:
+            return b
+    return 0
+
+
 def attention(q, k, v, *, causal: bool = True, scale=None,
               kv_len: int | None = None) -> jnp.ndarray:
     """q: (b, hq, sq, d); k/v: (b, hkv, skv, d)."""
@@ -205,12 +378,21 @@ def attention(q, k, v, *, causal: bool = True, scale=None,
                                    q_offset=q_offset)
         return ref.mha(q, k, v, causal=causal, scale=scale,
                        q_offset=q_offset)
-    sq = q.shape[2]
-    bq = min(128, sq) if sq >= 8 else sq
+    sq, skv, d = q.shape[2], k.shape[2], q.shape[-1]
+    # scheduler-sized blocks (autotune cache), shrunk to aligned divisors
+    # of the actual sequence lengths as the flash kernel requires
+    bm, bn, _ = matmul_blocks(sq, skv, d)
+    bq = _flash_block(sq, bm) if sq >= 8 else sq
+    bk = _flash_block(skv, bn)
+    if bq == 0 or bk == 0:
+        # no aligned block divides the sequence (e.g. prime lengths): the
+        # kernel cannot tile it — use the jnp oracle
+        eff = skv if kv_len is None else kv_len
+        return ref.mha(q, k, v, causal=causal, scale=scale,
+                       q_offset=eff - sq)
     return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
                                   kv_len=kv_len, block_q=bq,
-                                  block_k=min(128, k.shape[2]),
-                                  interpret=_interp())
+                                  block_k=bk, interpret=_interp())
 
 
 # ----------------------------------------------------------------------

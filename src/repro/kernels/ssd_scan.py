@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import compat
+
 
 def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, s_ref, *,
                 chunk: int):
@@ -85,7 +87,7 @@ def ssd_scan_pallas(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
         out_specs=pl.BlockSpec((1, chunk, dh), lambda h, c: (h, c, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, l, dh), x.dtype),
         scratch_shapes=[pltpu.VMEM((n, dh), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(A.astype(jnp.float32), x, dt, B, C)

@@ -237,14 +237,19 @@ def mlp_params(cfg: ArchConfig, key, d: int, ff: int) -> Params:
     return p
 
 
-def apply_mlp(cfg: ArchConfig, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+def apply_mlp(cfg: ArchConfig, p: Params, x: jnp.ndarray,
+              residual: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """MLP routed through ``ops.fused_mlp``: on the Pallas backends the
+    activation, SwiGLU gate and the caller's residual add execute as GEMM
+    store epilogues (one rounding, no extra HBM round trip); the ref
+    backend keeps the original plain-jnp math. Passing ``residual``
+    returns ``residual + mlp(x)`` so callers fuse their residual add."""
     dt = cfg.cdtype
     x = x.astype(dt)
-    if cfg.act == "swiglu":
-        h = jax.nn.silu(x @ p["w1"].astype(dt)) * (x @ p["w3"].astype(dt))
-    else:
-        h = jax.nn.gelu(x @ p["w1"].astype(dt))
-    return h @ p["w2"].astype(dt)
+    return ops.fused_mlp(
+        x, p["w1"].astype(dt), p["w2"].astype(dt),
+        w3=p["w3"].astype(dt) if cfg.act == "swiglu" else None,
+        act=cfg.act, residual=residual)
 
 
 # ----------------------------------------------------------------------

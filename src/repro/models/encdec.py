@@ -71,7 +71,7 @@ def encode(cfg: ArchConfig, params: Params, enc_embeds: jnp.ndarray):
         o, _ = attn.gqa_forward(cfg, p["attn"], h, pos=None, causal=False)
         x = x + o
         h = apply_norm(cfg, p["norm2"], x)
-        return sp_constrain(x + apply_mlp(cfg, p["ffn"], h)), None
+        return sp_constrain(apply_mlp(cfg, p["ffn"], h, residual=x)), None
 
     x, _ = scan_or_unroll(cfg, remat_wrap(cfg, body), x, params["enc_layers"])
     return apply_norm(cfg, params["enc_norm"], x)
@@ -112,7 +112,7 @@ def _decoder(cfg: ArchConfig, params: Params, tokens, enc,
                                     causal=False, kv=kv)
             x = x + o
             h = apply_norm(cfg, p["norm2"], x)
-            return sp_constrain(x + apply_mlp(cfg, p["ffn"], h)), None
+            return sp_constrain(apply_mlp(cfg, p["ffn"], h, residual=x)), None
 
         x, _ = scan_or_unroll(cfg, remat_wrap(cfg, body), x,
                               params["dec_layers"])
@@ -129,7 +129,7 @@ def _decoder(cfg: ArchConfig, params: Params, tokens, enc,
                                 kv=(c["ck"].astype(dt), c["cv"].astype(dt)))
         x = x + o
         h = apply_norm(cfg, p["norm2"], x)
-        x = x + apply_mlp(cfg, p["ffn"], h)
+        x = apply_mlp(cfg, p["ffn"], h, residual=x)
         new_c = {"k": kv_new["k"], "v": kv_new["v"], "ck": c["ck"],
                  "cv": c["cv"]}
         return x, new_c
@@ -175,7 +175,7 @@ def prefill(cfg: ArchConfig, params: Params, batch: Dict[str, Any],
                                 kv=(ck, cv))
         x = x + o
         h1 = apply_norm(cfg, p["norm2"], x)
-        x = x + apply_mlp(cfg, p["ffn"], h1)
+        x = apply_mlp(cfg, p["ffn"], h1, residual=x)
         pad = lambda t: _pad(t, cache_len)
         return x, {"k": pad(k), "v": pad(v),
                    "ck": ck.astype(jnp.bfloat16), "cv": cv.astype(jnp.bfloat16)}

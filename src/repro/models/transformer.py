@@ -142,9 +142,9 @@ def _apply_kind(cfg: ArchConfig, kind: str, p: Params, x, pos, aux):
     if ffn == "moe":
         o, a = moe_mod.apply_moe(cfg, p["ffn"], h)
         aux = aux + a
-    else:
-        o = apply_mlp(cfg, p["ffn"], h)
-    return x + o, aux
+        return x + o, aux
+    # residual add fused into the MLP's second-GEMM store epilogue
+    return apply_mlp(cfg, p["ffn"], h, residual=x), aux
 
 
 def backbone(cfg: ArchConfig, params: Params, x: jnp.ndarray,
@@ -308,9 +308,9 @@ def decode_step(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
             h = apply_norm(cfg, p["norm2"], x)
             if ffn == "moe":
                 o, _ = moe_mod.apply_moe(cfg, p["ffn"], h)
+                x = x + o
             else:
-                o = apply_mlp(cfg, p["ffn"], h)
-            x = x + o
+                x = apply_mlp(cfg, p["ffn"], h, residual=x)
         caches = dict(caches)
         caches[kind] = _update_tree(caches[kind], new_c, idx)
         return x, caches
@@ -402,9 +402,9 @@ def _prefill_impl(cfg: ArchConfig, params: Params, batch: Dict[str, Any],
             h = apply_norm(cfg, p["norm2"], x)
             if ffn == "moe":
                 o, _ = moe_mod.apply_moe(cfg, p["ffn"], h)
+                x = x + o
             else:
-                o = apply_mlp(cfg, p["ffn"], h)
-            x = x + o
+                x = apply_mlp(cfg, p["ffn"], h, residual=x)
         caches = dict(caches)
         caches[kind] = _update_tree(caches[kind], new_c, idx)
         return x, caches

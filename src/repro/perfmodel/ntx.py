@@ -107,6 +107,39 @@ def figure5_suite(spec=PAPER_CLUSTER) -> Dict[str, KernelPoint]:
 
 
 # ----------------------------------------------------------------------
+# Command-stream fusion pricing (§II-E offload model)
+# ----------------------------------------------------------------------
+def stream_fusion_gain(descs, spec: NtxClusterSpec = PAPER_CLUSTER,
+                       setup_cycles: int = 100) -> Dict[str, float]:
+    """Price a descriptor stream executed fused vs. one-command-at-a-time.
+
+    Sequential execution pays the full DMA traffic of every command plus a
+    per-command offload setup; the fused stream (``core.stream``) keeps
+    chain intermediates scratchpad-resident, so it moves only each fused
+    group's external bytes and amortises setup once per group. Time is the
+    paper's roofline max(compute, dma) at the derated practical rates.
+    """
+    from repro.core.stream import CommandStream
+    cs = CommandStream(descs)
+    flops = cs.flops()
+    setup = setup_cycles / spec.ntx_freq_hz
+    bytes_seq = cs.bytes_sequential()
+    bytes_fused = cs.bytes_moved()
+    t_seq = max(flops / spec.practical_flops,
+                bytes_seq / spec.practical_bw) + setup * len(cs.descs)
+    t_fused = max(flops / spec.practical_flops,
+                  bytes_fused / spec.practical_bw) + setup * len(cs.groups)
+    return {"flops": float(flops),
+            "bytes_sequential": float(bytes_seq),
+            "bytes_fused": float(bytes_fused),
+            "time_sequential_s": t_seq,
+            "time_fused_s": t_fused,
+            "speedup": t_seq / t_fused,
+            "n_groups": float(len(cs.groups)),
+            "n_fused_groups": float(sum(1 for g in cs.groups if g.fused))}
+
+
+# ----------------------------------------------------------------------
 # Paper headline claims (tested in tests/test_perfmodel.py)
 # ----------------------------------------------------------------------
 def peak_utilization_bound(spec=PAPER_CLUSTER) -> float:

@@ -30,8 +30,8 @@ def test_compressed_psum_and_ring_collectives():
         import json
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
-        from jax import shard_map
         from repro.distributed import collectives, overlap
+        from repro.distributed.compat import shard_map
         mesh = jax.make_mesh((8,), ("data",))
         rng = np.random.default_rng(0)
         x = rng.standard_normal((8, 1000)).astype(np.float32)

@@ -1,0 +1,213 @@
+"""Fused command-stream execution (core/stream.py) must agree with folding
+the engine oracle over the descriptors (descriptors here never read behind
+their own write head, where the cycle-sequential engine and functional
+dispatch legitimately differ) — with fusion actually removing the
+intermediate memory traffic, and falling back when illegal."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (Agu, CommandStream, Descriptor, Opcode, engine, gemm,
+                        plan_stream)
+from repro.core.dispatch import dispatch_stream
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(11)
+
+
+def _mem(n=8192):
+    return RNG.standard_normal(n).astype(np.float32)
+
+
+def _oracle(descs, mem):
+    for d in descs:
+        mem = engine.execute(d, mem)
+    return mem
+
+
+def _ew(op, n, src, dst, imm=0.0, y=None):
+    return Descriptor(bounds=(n,), opcode=op, imm=imm,
+                      agu0=Agu(src, (1,)),
+                      agu1=Agu(y, (1,)) if y is not None else Agu(),
+                      agu2=Agu(dst, (1,)))
+
+
+# ----------------------------------------------------------------------
+# Elementwise chains
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
+def test_chain3_single_gather_single_scatter(backend):
+    """A 3-op chain fuses into ONE pass: one gather, one scatter, and no
+    intermediate flat-memory materialization."""
+    n = 300
+    descs = [_ew(Opcode.THRESH, n, 0, 1024, imm=0.2),
+             _ew(Opcode.RELU, n, 1024, 1024),
+             _ew(Opcode.THRESH, n, 1024, 1024, imm=-0.5)]
+    mem = _mem()
+    cs = CommandStream(descs)
+    with ops.backend(backend):
+        got = np.asarray(cs.execute(mem))
+    np.testing.assert_allclose(got, _oracle(descs, mem), rtol=1e-5, atol=1e-5)
+    assert cs.stats["n_fused_groups"] == 1
+    assert cs.stats["gathers"] == 1
+    assert cs.stats["scatters"] == 1
+    # fused traffic: one stream in + one stream out vs 3 round trips
+    assert cs.bytes_moved() == 4 * 2 * n
+    assert cs.bytes_sequential() == 4 * 6 * n
+
+
+def test_chain_with_external_operand():
+    """2-read stages stream their second operand from outside the chain."""
+    n = 256
+    descs = [_ew(Opcode.THRESH, n, 0, 1024, imm=0.1),
+             _ew(Opcode.AXPY, n, 1024, 1024, imm=1.5, y=2048),
+             _ew(Opcode.MUL, n, 1024, 1024, y=3000)]
+    mem = _mem()
+    cs = CommandStream(descs)
+    got = np.asarray(cs.execute(mem))
+    np.testing.assert_allclose(got, _oracle(descs, mem), rtol=1e-5, atol=1e-5)
+    assert cs.stats["n_fused_groups"] == 1
+    assert cs.stats["gathers"] == 1 and cs.stats["operand_gathers"] == 2
+
+
+def test_illegal_fusion_falls_back():
+    """Breaking the in-place carry (different write region) or aliasing an
+    external operand with the carried region must fall back to the
+    per-descriptor path — and still match the oracle."""
+    n = 200
+    # middle op writes somewhere else: intermediates are observable
+    descs = [_ew(Opcode.THRESH, n, 0, 1024, imm=0.2),
+             _ew(Opcode.RELU, n, 1024, 4096),
+             _ew(Opcode.THRESH, n, 1024, 1024, imm=0.5)]
+    mem = _mem()
+    cs = CommandStream(descs)
+    got = np.asarray(cs.execute(mem))
+    np.testing.assert_allclose(got, _oracle(descs, mem), rtol=1e-5, atol=1e-5)
+    assert cs.stats["n_fused_groups"] == 0
+    assert cs.stats["scatters"] == 3
+
+    # second operand aliases the carried region: chain must break there
+    descs = [_ew(Opcode.RELU, n, 0, 1024),
+             _ew(Opcode.ADD, n, 1024, 1024, y=1024 + n // 2)]
+    cs = CommandStream(descs)
+    got = np.asarray(cs.execute(mem))
+    np.testing.assert_allclose(got, _oracle(descs, mem), rtol=1e-5, atol=1e-5)
+    assert cs.stats["n_fused_groups"] == 0
+
+
+def test_stream_mixed_groups_match_oracle():
+    """A stream mixing a fusable chain, an unfusable strided nest, and a
+    GEMM still matches the oracle end to end (dispatch_stream facade)."""
+    n = 128
+    odd = Descriptor(bounds=(3, 4), opcode=Opcode.MAC, init_level=1,
+                     store_level=1, agu0=Agu(0, (2, 9)),
+                     agu1=Agu(100, (3, 0)), agu2=Agu(300, (0, 2)))
+    descs = [_ew(Opcode.THRESH, n, 0, 2048, imm=0.3),
+             _ew(Opcode.RELU, n, 2048, 2048),
+             odd,
+             gemm(8, 6, 10, 4096, 4300, 4500)]
+    mem = _mem()
+    got = np.asarray(dispatch_stream(descs, mem))
+    np.testing.assert_allclose(got, _oracle(descs, mem), rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# GEMM epilogues
+# ----------------------------------------------------------------------
+def test_gemm_descriptor_epilogue_fusion():
+    """GEMM descriptor + bias-broadcast ADD + RELU fuse into one group and
+    match the engine oracle."""
+    m_, n_, k_ = 12, 9, 17
+    c0 = 2048
+    dg = gemm(m_, n_, k_, 0, 1024, c0)
+    dbias = Descriptor(bounds=(n_, m_), opcode=Opcode.ADD,
+                       agu0=Agu(c0, (1, n_)), agu1=Agu(4000, (1, 0)),
+                       agu2=Agu(c0, (1, n_)))
+    drelu = _ew(Opcode.RELU, m_ * n_, c0, c0)
+    mem = _mem()
+    cs = CommandStream([dg, dbias, drelu])
+    assert cs.stats["n_fused_groups"] == 1
+    got = np.asarray(cs.execute(mem))
+    np.testing.assert_allclose(got, _oracle([dg, dbias, drelu], mem),
+                               rtol=1e-4, atol=1e-4)
+    assert cs.stats["scatters"] == 1     # C written once, post-epilogue
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
+def test_gemm_epilogue_matches_ref_composition(backend):
+    """ops.gemm(..., epilogue=) == the unfused ref composition (fp32)."""
+    a = RNG.standard_normal((50, 30)).astype(np.float32)
+    b = RNG.standard_normal((30, 40)).astype(np.float32)
+    bias = RNG.standard_normal(40).astype(np.float32)
+    res = RNG.standard_normal((50, 40)).astype(np.float32)
+    want = np.asarray(ref.gemm(a, b), np.float64)
+    want = np.maximum(want + bias[None], 0) * 0.5 + res
+    with ops.backend(backend):
+        got = np.asarray(ops.gemm(a, b, epilogue=[
+            ("bias", bias), ("relu",), ("scale", 0.5), ("residual", res)]))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("act", ["swiglu", "gelu"])
+def test_fused_mlp_matches_plain(act):
+    x = RNG.standard_normal((16, 32)).astype(np.float32)
+    w1 = RNG.standard_normal((32, 64)).astype(np.float32)
+    w2 = RNG.standard_normal((64, 32)).astype(np.float32)
+    w3 = RNG.standard_normal((32, 64)).astype(np.float32)
+    res = RNG.standard_normal((16, 32)).astype(np.float32)
+    want = np.asarray(ops.fused_mlp(x, w1, w2, w3=w3 if act == "swiglu"
+                                    else None, act=act, residual=res))
+    with ops.backend("pallas_interpret"):
+        got = np.asarray(ops.fused_mlp(x, w1, w2,
+                                       w3=w3 if act == "swiglu" else None,
+                                       act=act, residual=res))
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+# ----------------------------------------------------------------------
+# Autotuned block sizes
+# ----------------------------------------------------------------------
+def test_autotune_cache_hit():
+    """Repeated shapes hit the per-shape block cache; blocks come from the
+    scheduler (aligned), not hardcoded 128^3."""
+    ops._BLOCK_CACHE.clear()
+    before = ops.block_cache_stats()
+    b1 = ops.matmul_blocks(512, 768, 1024)
+    mid = ops.block_cache_stats()
+    b2 = ops.matmul_blocks(512, 768, 1024)
+    after = ops.block_cache_stats()
+    assert b1 == b2
+    assert mid["misses"] == before["misses"] + 1
+    assert after["hits"] == mid["hits"] + 1
+    # alignment contract the Pallas kernels rely on
+    bm, bn, bk = b1
+    assert bm % 8 == 0 and bn % 128 == 0 and bk % 128 == 0
+    # VMEM sizing comes through pick_matmul_blocks: a huge matmul must not
+    # get unbounded blocks
+    from repro.core.cluster import TpuChipSpec
+    bm, bn, bk = ops.matmul_blocks(1 << 14, 1 << 14, 1 << 14)
+    assert 2 * 4 * (bm * bk + bk * bn + bm * bn) <= TpuChipSpec().vmem_bytes
+
+
+def test_gemm_uses_scheduler_blocks():
+    """ops.gemm works across shapes under pallas_interpret with the
+    scheduler-picked blocks (incl. non-multiples needing padding)."""
+    for (m, k, n) in [(12, 9, 17), (130, 64, 257), (256, 256, 256)]:
+        a = RNG.standard_normal((m, k)).astype(np.float32)
+        b = RNG.standard_normal((k, n)).astype(np.float32)
+        with ops.backend("pallas_interpret"):
+            got = np.asarray(ops.gemm(a, b))
+        np.testing.assert_allclose(got, np.asarray(ref.gemm(a, b)),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_plan_stream_groups():
+    """plan_stream partitions: fused chain + sequential leftovers."""
+    n = 64
+    descs = [_ew(Opcode.RELU, n, 0, 1024),
+             _ew(Opcode.THRESH, n, 1024, 1024, imm=0.1),
+             _ew(Opcode.COPY, n, 512, 3000)]       # unrelated: not fused
+    groups = plan_stream(descs)
+    assert [g.fused for g in groups] == [True, False]
+    assert len(groups[0].descs) == 2 and len(groups[1].descs) == 1
