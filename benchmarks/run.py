@@ -1,21 +1,42 @@
 """Benchmark driver — one section per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows per benchmark; sections:
-  table1    figures of merit of the 22FDX cluster (paper Table I)
-  fig5      roofline points for the paper's kernel suite (paper Fig. 5)
-  table2    DNN-training efficiency, NTX 16x..512x (paper Table II)
-  fig6_7    energy/area-efficiency ratios vs GPUs (paper Figs. 6-7)
-  precision wide-accumulator RMSE study (paper §II-C claim)
-  kernels   measured wall-clock of our kernels on CPU (jnp ref path +
-            Pallas interpret-mode sanity numbers)
-  roofline  TPU roofline table from the dry-run artifacts (if present)
+Prints ``name,us_per_call,derived`` CSV rows per benchmark; with ``--json``
+it instead emits one stable JSON document (schema below) so bench
+trajectory files can be diffed across PRs. Sections:
+  table1      figures of merit of the 22FDX cluster (paper Table I)
+  fig5        roofline points for the paper's kernel suite (paper Fig. 5)
+  table2      DNN-training efficiency, NTX 16x..512x (paper Table II)
+  fig6_7      energy/area-efficiency ratios vs GPUs (paper Figs. 6-7)
+  precision   wide-accumulator RMSE study (paper §II-C claim)
+  kernels     measured wall-clock of our kernels on CPU (jnp ref path +
+              Pallas interpret-mode sanity numbers)
+  fusion      fused command-stream execution vs per-descriptor dispatch
+  multistream multi-cluster stream-graph scheduling vs serial dispatch
+  roofline    TPU roofline table from the dry-run artifacts (if present)
+
+JSON schema (stable; bump ``schema_version`` on breaking changes):
+  {"schema_version": 1,
+   "sections": {<section>: [{"name": str, "us_per_call": float,
+                             "derived": float | str}, ...]}}
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
 import numpy as np
+
+_ROWS: list = []
+_JSON = False
+
+
+def emit(name: str, us: float, derived) -> None:
+    """One benchmark row. ``name`` is dotted: <section>.<metric...>."""
+    _ROWS.append({"name": name, "us_per_call": round(float(us), 1),
+                  "derived": derived})
+    if not _JSON:
+        print(f"{name},{us:.1f},{derived}")
 
 
 def _t(fn, *args, reps=3, **kw):
@@ -40,9 +61,9 @@ def bench_table1():
     from repro.perfmodel import ntx
     us = _t(ntx.table1_figures)
     for k, v in ntx.table1_figures().items():
-        print(f"table1.{k},{us:.1f},{v:.3f}")
-    print(f"table1.practical_peak_fraction,{us:.1f},"
-          f"{ntx.peak_utilization_bound():.3f}")
+        emit(f"table1.{k}", us, f"{v:.3f}")
+    emit("table1.practical_peak_fraction", us,
+         f"{ntx.peak_utilization_bound():.3f}")
 
 
 def bench_fig5():
@@ -50,8 +71,8 @@ def bench_fig5():
     us = _t(ntx.figure5_suite)
     for name, p in ntx.figure5_suite().items():
         tag = name.replace(" ", "_")
-        print(f"fig5.{tag}.gflops,{us:.1f},{p.gflops:.3f}")
-        print(f"fig5.{tag}.intensity,{us:.1f},{p.intensity:.3f}")
+        emit(f"fig5.{tag}.gflops", us, f"{p.gflops:.3f}")
+        emit(f"fig5.{tag}.intensity", us, f"{p.intensity:.3f}")
 
 
 def bench_table2():
@@ -60,9 +81,9 @@ def bench_table2():
     us = _t(dnn.table2, pm)
     for row in dnn.table2(pm):
         tag = f"ntx{row['n_clusters']}_{row['node_nm']}nm"
-        print(f"table2.{tag}.model,{us:.1f},{row['model_geomean']}")
-        print(f"table2.{tag}.paper,{us:.1f},{row['paper_geomean']}")
-        print(f"table2.{tag}.rel_err,{us:.1f},{row['rel_err']}")
+        emit(f"table2.{tag}.model", us, row["model_geomean"])
+        emit(f"table2.{tag}.paper", us, row["paper_geomean"])
+        emit(f"table2.{tag}.rel_err", us, row["rel_err"])
 
 
 def bench_fig6_7():
@@ -70,7 +91,7 @@ def bench_fig6_7():
     pm = dnn.calibrate()
     us = _t(dnn.gpu_comparison, pm)
     for k, v in dnn.gpu_comparison(pm).items():
-        print(f"fig6_7.{k},{us:.1f},{v:.3f}")
+        emit(f"fig6_7.{k}", us, f"{v:.3f}")
 
 
 def bench_precision():
@@ -78,7 +99,7 @@ def bench_precision():
     us = _t(conv_layer_rmse_study, reps=1, n_outputs=64)
     r = conv_layer_rmse_study(n_outputs=128)
     for k, v in r.items():
-        print(f"precision.{k},{us:.1f},{v:.4g}")
+        emit(f"precision.{k}", us, f"{v:.4g}")
 
 
 def bench_kernels():
@@ -93,17 +114,16 @@ def bench_kernels():
     x2 = jnp.asarray(rng.standard_normal((128, 2048)).astype(np.float32))
     gemm_j = jax.jit(lambda a, b: ref.gemm(a, b))
     us = _t(gemm_j, a, b, reps=10)
-    print(f"kernels.gemm_512_ref,{us:.1f},{2*512**3/(us*1e-6)/1e9:.2f}")
+    emit("kernels.gemm_512_ref", us, f"{2*512**3/(us*1e-6)/1e9:.2f}")
     conv_j = jax.jit(lambda i, k: ref.conv2d(i, k))
     us = _t(conv_j, img, ker, reps=10)
-    print(f"kernels.conv3x3_256_ref,{us:.1f},"
-          f"{2*9*254*254/(us*1e-6)/1e9:.2f}")
+    emit("kernels.conv3x3_256_ref", us, f"{2*9*254*254/(us*1e-6)/1e9:.2f}")
     red_j = jax.jit(lambda x: ref.reduce('max', x))
     us = _t(red_j, x2, reps=10)
-    print(f"kernels.reduce_max_ref,{us:.1f},{x2.size*4/(us*1e-6)/1e9:.2f}")
+    emit("kernels.reduce_max_ref", us, f"{x2.size*4/(us*1e-6)/1e9:.2f}")
     with ops.backend("pallas_interpret"):
         us = _t(ops.gemm, a[:128, :128], b[:128, :128], reps=1)
-        print(f"kernels.gemm_128_pallas_interpret,{us:.1f},1")
+        emit("kernels.gemm_128_pallas_interpret", us, 1)
 
 
 def bench_fusion():
@@ -143,9 +163,9 @@ def bench_fusion():
 
     us_f = _t(run_fused, mem, reps=5)
     us_s = _t(run_seq, mem, reps=5)
-    print(f"fusion.chain3.fused,{us_f:.1f},{cs.bytes_moved()}")
-    print(f"fusion.chain3.unfused,{us_s:.1f},{cs.bytes_sequential()}")
-    print(f"fusion.chain3.speedup,{us_f:.1f},{us_s / max(us_f, 1e-9):.3f}")
+    emit("fusion.chain3.fused", us_f, cs.bytes_moved())
+    emit("fusion.chain3.unfused", us_s, cs.bytes_sequential())
+    emit("fusion.chain3.speedup", us_f, f"{us_s / max(us_f, 1e-9):.3f}")
 
     # --- GEMM + bias + ReLU epilogue ---------------------------------
     m_ = 512
@@ -167,22 +187,87 @@ def bench_fusion():
     us_s = _t(unfused, a, b, bias, reps=5)
     ep_bytes_fused = 4 * (3 * m_ * m_ + m_)                 # A,B in; C out; bias
     ep_bytes_seq = 4 * (3 * m_ * m_ + m_ + 4 * m_ * m_)     # + 2 extra C trips
-    print(f"fusion.gemm_bias_relu.fused,{us_f:.1f},{ep_bytes_fused}")
-    print(f"fusion.gemm_bias_relu.unfused,{us_s:.1f},{ep_bytes_seq}")
-    print(f"fusion.gemm_bias_relu.speedup,{us_f:.1f},"
-          f"{us_s / max(us_f, 1e-9):.3f}")
+    emit("fusion.gemm_bias_relu.fused", us_f, ep_bytes_fused)
+    emit("fusion.gemm_bias_relu.unfused", us_s, ep_bytes_seq)
+    emit("fusion.gemm_bias_relu.speedup", us_f,
+         f"{us_s / max(us_f, 1e-9):.3f}")
 
     # --- analytical NTX-cluster pricing of the same chain ------------
     from repro.perfmodel.ntx import stream_fusion_gain
     g = stream_fusion_gain(chain)
-    print(f"fusion.chain3.model_speedup,0,{g['speedup']:.3f}")
+    emit("fusion.chain3.model_speedup", 0, f"{g['speedup']:.3f}")
+
+
+def bench_multistream():
+    """Multi-cluster stream-graph scheduling vs serial dispatch.
+
+    A 4-independent-stream workload (4 disjoint 3-op chains): serial
+    CommandStream vs the ClusterScheduler's concurrent execution (shard_map
+    over the device mesh when >= 2 devices, stacked-vmap lanes otherwise),
+    plus the analytical per-cluster-count speedups. On a single device the
+    host-fallback path is exercised and asserted.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import Agu, CommandStream, Descriptor, Opcode
+    from repro.core.multistream import ClusterScheduler
+    from repro.perfmodel.ntx import multistream_gain
+    rng = np.random.default_rng(0)
+
+    n = 1 << 18
+    n_streams = 4
+    mem = jnp.asarray(
+        rng.standard_normal(2 * n * n_streams).astype(np.float32))
+    descs = []
+    for i in range(n_streams):
+        x, t = 2 * n * i, 2 * n * i + n
+        descs += [
+            Descriptor(bounds=(n,), opcode=Opcode.THRESH, imm=0.2,
+                       agu0=Agu(x, (1,)), agu2=Agu(t, (1,))),
+            Descriptor(bounds=(n,), opcode=Opcode.RELU,
+                       agu0=Agu(t, (1,)), agu2=Agu(t, (1,))),
+            Descriptor(bounds=(n,), opcode=Opcode.AXPY, imm=1.5,
+                       agu0=Agu(t, (1,)), agu1=Agu(x, (1,)),
+                       agu2=Agu(t, (1,))),
+        ]
+
+    serial = CommandStream(descs)
+    n_dev = len(jax.devices())
+    sched = ClusterScheduler(descs, n_clusters=max(n_dev, 1))
+    mode = sched.plan_mode()
+    emit("multistream.workload.n_substreams", 0,
+         sched.stats["n_substreams"])
+    emit("multistream.workload.n_devices", 0, n_dev)
+    emit("multistream.mode", 0, mode)
+
+    us_serial = _t(serial.execute, mem, reps=5)
+    us_graph = _t(lambda m: sched.execute(m, mode=mode), mem, reps=5)
+    match = bool(np.allclose(np.asarray(serial.execute(mem)),
+                             np.asarray(sched.execute(mem, mode=mode)),
+                             rtol=1e-6, atol=1e-6))
+    emit("multistream.serial", us_serial, serial.bytes_moved())
+    emit("multistream.graph", us_graph, sched.stats["n_clusters"])
+    emit("multistream.speedup", us_graph,
+         f"{us_serial / max(us_graph, 1e-9):.3f}")
+    emit("multistream.match", 0, int(match))
+    if n_dev == 1:
+        # acceptance: the host fallback must be what ran on one device
+        assert mode in ("vmap", "interleave"), mode
+        emit("multistream.single_device_fallback_asserted", 0, 1)
+
+    for c in (1, 2, 4, 8):
+        g = multistream_gain(descs, n_clusters=c)
+        emit(f"multistream.model_speedup_c{c}", 0, f"{g['speedup']:.3f}")
+    g = multistream_gain(descs, n_clusters=4)
+    emit("multistream.model_dma_overlap_gain", 0,
+         f"{g['dma_overlap_gain']:.3f}")
 
 
 def bench_roofline():
     import os
     d = "results/dryrun"
     if not os.path.isdir(d) or not os.listdir(d):
-        print("roofline.skipped,0,0")
+        emit("roofline.skipped", 0, 0)
         return
     from repro.perfmodel import tpu_roofline
     rows = tpu_roofline.roofline_table(d)
@@ -190,9 +275,9 @@ def bench_roofline():
         if r.get("skipped"):
             continue
         tag = f"{r['arch']}.{r['shape']}"
-        print(f"roofline.{tag}.dominant_{r['dominant']},0,"
-              f"{r['bound_time_s']:.4g}")
-        print(f"roofline.{tag}.fraction,0,{r['roofline_fraction']:.4g}")
+        emit(f"roofline.{tag}.dominant_{r['dominant']}", 0,
+             f"{r['bound_time_s']:.4g}")
+        emit(f"roofline.{tag}.fraction", 0, f"{r['roofline_fraction']:.4g}")
 
 
 SECTIONS = {
@@ -203,15 +288,41 @@ SECTIONS = {
     "precision": bench_precision,
     "kernels": bench_kernels,
     "fusion": bench_fusion,
+    "multistream": bench_multistream,
     "roofline": bench_roofline,
 }
 
 
+def _as_json() -> str:
+    sections: dict = {}
+    for row in _ROWS:
+        section = row["name"].split(".", 1)[0]
+        derived = row["derived"]
+        if isinstance(derived, str):
+            try:
+                derived = float(derived)
+            except ValueError:
+                pass
+        sections.setdefault(section, []).append(
+            {"name": row["name"], "us_per_call": row["us_per_call"],
+             "derived": derived})
+    return json.dumps({"schema_version": 1, "sections": sections}, indent=1)
+
+
 def main() -> None:
-    which = sys.argv[1:] or list(SECTIONS)
-    print("name,us_per_call,derived")
+    global _JSON
+    args = sys.argv[1:]
+    _JSON = "--json" in args
+    unknown = [a for a in args if a.startswith("--") and a != "--json"]
+    if unknown:
+        raise SystemExit(f"unknown flag(s): {unknown}; supported: --json")
+    which = [a for a in args if not a.startswith("--")] or list(SECTIONS)
+    if not _JSON:
+        print("name,us_per_call,derived")
     for name in which:
         SECTIONS[name]()
+    if _JSON:
+        print(_as_json())
 
 
 if __name__ == "__main__":

@@ -15,8 +15,9 @@ from .scheduler import (TileSchedule, Tile, schedule_axpy, schedule_gemv,
                         schedule_gemm, schedule_conv2d, schedule_stencil,
                         pick_matmul_blocks)
 from . import precision
-from .dispatch import dispatch, dispatch_stream
+from .dispatch import dispatch, dispatch_graph, dispatch_stream
 from .stream import CommandStream, plan_stream
+from .multistream import ClusterScheduler, StreamGraph, SubStream
 
 __all__ = [
     "Agu", "Descriptor", "Opcode", "axpy", "gemv", "gemm", "memcpy",
@@ -27,5 +28,6 @@ __all__ = [
     "TileSchedule", "Tile", "schedule_axpy", "schedule_gemv",
     "schedule_gemm", "schedule_conv2d", "schedule_stencil",
     "pick_matmul_blocks", "precision", "dispatch", "dispatch_stream",
-    "CommandStream", "plan_stream",
+    "dispatch_graph", "CommandStream", "plan_stream",
+    "ClusterScheduler", "StreamGraph", "SubStream",
 ]

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -59,6 +60,11 @@ def _match_gemv(desc: Descriptor) -> Optional[tuple]:
     return None
 
 
+def _matches_reduce(desc: Descriptor) -> bool:
+    return (desc.opcode in _RED_OPS and len(desc.bounds) == 1
+            and desc.init_level == 1 and desc.agu0.strides[0] == 1)
+
+
 def dispatch(desc: Descriptor, mem: jnp.ndarray) -> jnp.ndarray:
     """Execute one NTX command on the flat memory via the kernel suite.
 
@@ -91,15 +97,30 @@ def dispatch(desc: Descriptor, mem: jnp.ndarray) -> jnp.ndarray:
         out = ops.elementwise(_EW_OPS[desc.opcode], x, y, imm=desc.imm)
         return mem.at[desc.agu2.base:desc.agu2.base + n].set(out[0])
 
-    if (desc.opcode in _RED_OPS and len(desc.bounds) == 1
-            and desc.init_level == 1 and desc.agu0.strides[0] == 1):
+    if _matches_reduce(desc):
         n = desc.bounds[0]
         x = mem[desc.agu0.base:desc.agu0.base + n][None]
         red = ops.reduce(_RED_OPS[desc.opcode], x)
         return mem.at[desc.agu2.base].set(red[0].astype(jnp.float32))
 
-    # no blocked kernel for this nest: functional engine fallback
+    # no blocked kernel for this nest: functional engine fallback. Under
+    # tracing (vmap/shard_map multi-cluster execution) the numpy engine
+    # cannot run — use the jittable plan, which covers every descriptor
+    # with store_level == init_level (see traceable_descriptor).
+    if isinstance(mem, jax.core.Tracer):
+        return engine.execute_jax(desc, mem)
     return jnp.asarray(engine.execute_vectorized(desc, np.asarray(mem)))
+
+
+def traceable_descriptor(desc: Descriptor) -> bool:
+    """True iff :func:`dispatch` can execute this descriptor under a jax
+    trace (kernel pattern match, or the jittable engine plan) — the
+    requirement for vmap/shard_map multi-cluster execution."""
+    return (_match_gemm(desc) is not None
+            or _match_gemv(desc) is not None
+            or (desc.opcode in _EW_OPS and _is_contiguous_1d(desc))
+            or _matches_reduce(desc)
+            or desc.store_level == desc.init_level)
 
 
 def dispatch_stream(descs, mem: jnp.ndarray) -> jnp.ndarray:
@@ -112,3 +133,17 @@ def dispatch_stream(descs, mem: jnp.ndarray) -> jnp.ndarray:
     """
     from .stream import CommandStream
     return CommandStream(descs).execute(mem)
+
+
+def dispatch_graph(descs, mem: jnp.ndarray, n_clusters: int | None = None,
+                   mode: str = "auto") -> jnp.ndarray:
+    """Execute a descriptor program as a multi-cluster stream graph.
+
+    The program is dependency-analysed over AGU address ranges, partitioned
+    into independent sub-streams, and scheduled across the cluster mesh
+    (``repro.core.multistream``): shard_map over devices when >= 2 are
+    present and the sub-streams are uniform, interleaved host execution
+    otherwise. Always semantically equal to ``dispatch_stream``.
+    """
+    from .multistream import ClusterScheduler
+    return ClusterScheduler(descs, n_clusters=n_clusters).execute(mem, mode)

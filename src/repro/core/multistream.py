@@ -1,0 +1,381 @@
+"""Multi-cluster stream scheduling: the paper's scaled-out machine.
+
+The headline scaling claim (§III, Table II: 1 -> 8+ clusters) rests on many
+NTX clusters executing *independent* descriptor streams concurrently, each
+hiding DMA behind compute via double-buffered TCDM. The companion
+near-memory work (arXiv:1803.04783) scales the same loosely-coupled
+clusters across DRAM vaults precisely because streams with disjoint address
+ranges never synchronize.
+
+This module builds that layer on top of ``core.stream``:
+
+* :class:`StreamGraph` — dependency DAG over the AGUs' affine address
+  ranges (``agu_span``/``spans_overlap``): descriptor j depends on an
+  earlier descriptor i iff their accesses conflict (read-after-write,
+  write-after-read or write-after-write). Read-read sharing — e.g. every
+  layer streaming the same weights — creates no edge. The DAG's connected
+  components are provably independent sub-streams: across components, no
+  write ever overlaps another component's reads or writes, so any
+  interleaving (including full concurrency) is bit-equivalent to program
+  order.
+* :class:`SubStream` — one component, rebased into a compact local memory
+  window with its own fused :class:`~repro.core.stream.CommandStream`
+  (intra-stream fusion still applies) and a double-buffered DMA/compute
+  roofline cost.
+* :class:`ClusterScheduler` — maps sub-streams onto an
+  :class:`~repro.core.cluster.NtxClusterSpec`-derived mesh with LPT
+  (longest-processing-time-first) load balancing, and executes them
+  concurrently: ``shard_map`` over a "cluster" mesh axis on >= 2 devices
+  (each device = one cluster with its own window, like the per-cluster DMA
+  engines), ``vmap``-stacked lanes on one device, or interleaved host
+  execution as the always-correct fallback.
+
+``dispatch.dispatch_graph`` is the one-call entry point.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .cluster import NtxClusterSpec, PAPER_CLUSTER
+from .descriptor import Descriptor
+from .stream import CommandStream, agu_span, spans_overlap
+
+Span = Tuple[int, int]
+
+
+# ----------------------------------------------------------------------
+# Span analysis
+# ----------------------------------------------------------------------
+def desc_spans(desc: Descriptor) -> Tuple[List[Span], Span]:
+    """(read spans, write span) — the conservative AGU footprints."""
+    reads: List[Span] = []
+    if desc.reads_per_iter >= 1:
+        reads.append(agu_span(desc.agu0, desc.bounds))
+    if desc.reads_per_iter >= 2:
+        reads.append(agu_span(desc.agu1, desc.bounds))
+    return reads, agu_span(desc.agu2, desc.bounds)
+
+
+def _merge_spans(spans: Sequence[Span]) -> List[Span]:
+    """Union of half-open intervals, sorted, overlaps/adjacency merged."""
+    out: List[Span] = []
+    for lo, hi in sorted(spans):
+        if out and lo <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], hi))
+        else:
+            out.append((lo, hi))
+    return out
+
+
+def _conflict(a_reads, a_write, b_reads, b_write) -> bool:
+    """True iff the two descriptors must stay ordered (RAW/WAR/WAW)."""
+    if spans_overlap(a_write, b_write):
+        return True
+    if any(spans_overlap(a_write, r) for r in b_reads):
+        return True
+    return any(spans_overlap(b_write, r) for r in a_reads)
+
+
+# ----------------------------------------------------------------------
+# Sub-streams
+# ----------------------------------------------------------------------
+@dataclasses.dataclass
+class SubStream:
+    """One independent component of the program, in program order.
+
+    ``descs`` are the original descriptors; ``local`` the same descriptors
+    rebased so the window [lo, hi) maps to local addresses [0, size).
+    """
+
+    indices: Tuple[int, ...]
+    descs: List[Descriptor]
+    lo: int
+    hi: int
+    write_ranges: List[Span]            # global, merged; disjoint across subs
+    local: List[Descriptor] = dataclasses.field(default_factory=list)
+    stream: CommandStream = None
+
+    @property
+    def size(self) -> int:
+        return self.hi - self.lo
+
+    def roofline_time(self, spec: NtxClusterSpec = PAPER_CLUSTER,
+                      setup_cycles: int = 100, overlap: bool = True) -> float:
+        """Time on ONE cluster: double-buffered max(compute, dma) per fused
+        group (overlap=False: the costs add — no DMA engine), plus the
+        per-group offload setup the RISC-V pays."""
+        flops = self.stream.flops()
+        byts = self.stream.bytes_moved()
+        tc = flops / spec.practical_flops
+        td = byts / spec.practical_bw
+        t = max(tc, td) if overlap else (tc + td)
+        return t + setup_cycles / spec.ntx_freq_hz * len(self.stream.groups)
+
+
+def _rebase(desc: Descriptor, lo: int) -> Descriptor:
+    shift = lambda agu: dataclasses.replace(agu, base=agu.base - lo)
+    kw = {"agu2": shift(desc.agu2)}
+    if desc.reads_per_iter >= 1:
+        kw["agu0"] = shift(desc.agu0)
+    if desc.reads_per_iter >= 2:
+        kw["agu1"] = shift(desc.agu1)
+    return dataclasses.replace(desc, **kw)
+
+
+# ----------------------------------------------------------------------
+# The DAG
+# ----------------------------------------------------------------------
+class StreamGraph:
+    """Dependency DAG over a descriptor program's AGU address ranges."""
+
+    def __init__(self, descs: Sequence[Descriptor]):
+        self.descs = list(descs)
+        spans = [desc_spans(d) for d in self.descs]
+        n = len(self.descs)
+        self.edges: List[Tuple[int, int]] = []
+        parent = list(range(n))
+
+        def find(i):
+            while parent[i] != i:
+                parent[i] = parent[parent[i]]
+                i = parent[i]
+            return i
+
+        for j in range(n):
+            rj, wj = spans[j]
+            for i in range(j):
+                ri, wi = spans[i]
+                if _conflict(ri, wi, rj, wj):
+                    self.edges.append((i, j))
+                    parent[find(i)] = find(j)
+        self._roots = [find(i) for i in range(n)]
+        self._spans = spans
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.edges)
+
+    def partition(self) -> List[SubStream]:
+        """Independent sub-streams, deterministically ordered by the index
+        of their first descriptor; each keeps program order internally."""
+        comps: dict = {}
+        for i, r in enumerate(self._roots):
+            comps.setdefault(r, []).append(i)
+        subs: List[SubStream] = []
+        for idxs in sorted(comps.values(), key=lambda ix: ix[0]):
+            descs = [self.descs[i] for i in idxs]
+            touched: List[Span] = []
+            writes: List[Span] = []
+            for i in idxs:
+                reads, write = self._spans[i]
+                touched.extend(reads)
+                touched.append(write)
+                writes.append(write)
+            lo = min(s[0] for s in touched)
+            hi = max(s[1] for s in touched)
+            sub = SubStream(indices=tuple(idxs), descs=descs, lo=lo, hi=hi,
+                            write_ranges=_merge_spans(writes))
+            sub.local = [_rebase(d, lo) for d in descs]
+            sub.stream = CommandStream(sub.local)
+            subs.append(sub)
+        return subs
+
+
+# ----------------------------------------------------------------------
+# The scheduler
+# ----------------------------------------------------------------------
+def _lpt_assign(costs: Sequence[float], n_clusters: int) -> List[int]:
+    """Longest-processing-time-first onto the least-loaded cluster.
+    Deterministic: ties broken by sub-stream index, then cluster index."""
+    order = sorted(range(len(costs)), key=lambda i: (-costs[i], i))
+    load = [0.0] * n_clusters
+    assign = [0] * len(costs)
+    for i in order:
+        c = min(range(n_clusters), key=lambda k: (load[k], k))
+        assign[i] = c
+        load[c] += costs[i]
+    return assign
+
+
+class ClusterScheduler:
+    """Maps a program's independent sub-streams onto a cluster mesh.
+
+    Execution modes (``execute(mem, mode=...)``):
+
+    * ``"shard_map"`` — stacked windows sharded over a 1-D "cluster" device
+      mesh (through ``distributed.compat``); each device runs its lanes'
+      shared program. Requires uniform + traceable sub-streams, >= 2 devices.
+    * ``"vmap"``      — the same stacked body batched on one device: the
+      lanes execute as ONE fused computation (overlapped, no per-stream
+      dispatch round trips). Requires uniform + traceable.
+    * ``"interleave"``— host fallback, always legal: sub-streams execute on
+      their local windows round-robin at fused-group granularity (the
+      single-device analogue of the per-cluster DMA interleave).
+    * ``"serial"``    — one CommandStream over the whole program (oracle).
+    * ``"auto"``      — shard_map if legal and >= 2 devices, else interleave.
+
+    Every mode is bit-equivalent to serial execution for elementwise
+    programs and numerically equivalent (same-kernel, different batching)
+    otherwise; independence of the partition guarantees order freedom.
+    """
+
+    def __init__(self, descs_or_graph, n_clusters: Optional[int] = None,
+                 spec: NtxClusterSpec = PAPER_CLUSTER,
+                 setup_cycles: int = 100):
+        self.graph = (descs_or_graph if isinstance(descs_or_graph, StreamGraph)
+                      else StreamGraph(descs_or_graph))
+        self.spec = spec
+        self.substreams = self.graph.partition()
+        if n_clusters is None:
+            n_clusters = max(1, len(jax.devices()))
+        self.n_clusters = max(1, int(n_clusters))
+        self.costs = [s.roofline_time(spec, setup_cycles)
+                      for s in self.substreams]
+        self.assignment = _lpt_assign(self.costs, self.n_clusters)
+        self._jitted = {}
+        self.stats = {
+            "n_descriptors": len(self.graph.descs),
+            "n_substreams": len(self.substreams),
+            "n_edges": self.graph.n_edges,
+            "n_clusters": self.n_clusters,
+            "assignment": list(self.assignment),
+            "uniform": self.uniform(),
+            "traceable": self.traceable(),
+            "cluster_times_s": self.cluster_times(),
+            "critical_path_s": max(self.cluster_times()),
+            "serial_time_s": sum(self.costs),
+            "mode_used": None,
+        }
+
+    # -- analysis ------------------------------------------------------
+    def cluster_times(self) -> List[float]:
+        t = [0.0] * self.n_clusters
+        for cost, c in zip(self.costs, self.assignment):
+            t[c] += cost
+        return t
+
+    def model_speedup(self) -> float:
+        crit = max(self.cluster_times()) if self.costs else 0.0
+        return sum(self.costs) / crit if crit > 0 else 1.0
+
+    def uniform(self) -> bool:
+        """All sub-streams share one rebased program (and window size) — the
+        data-parallel-clusters case the paper scales: one kernel, per-cluster
+        data tiles. Only then can the lanes stack for vmap/shard_map."""
+        subs = self.substreams
+        if not subs:
+            return False
+        first = subs[0]
+        return all(s.size == first.size and s.local == first.local
+                   for s in subs[1:])
+
+    def traceable(self) -> bool:
+        from .dispatch import traceable_descriptor
+        return all(traceable_descriptor(d)
+                   for s in self.substreams for d in s.local)
+
+    def plan_mode(self, mode: str = "auto") -> str:
+        if mode != "auto":
+            return mode
+        if self.uniform() and self.traceable():
+            if len(jax.devices()) >= 2 and len(self.substreams) >= 2:
+                return "shard_map"
+            return "vmap"
+        return "interleave"
+
+    # -- execution -----------------------------------------------------
+    def execute(self, mem, mode: str = "auto") -> jnp.ndarray:
+        mem = jnp.asarray(mem, jnp.float32)
+        mode = self.plan_mode(mode)
+        self.stats["mode_used"] = mode
+        if mode == "serial":
+            return CommandStream(self.graph.descs).execute(mem)
+        if mode == "interleave":
+            return self._execute_interleaved(mem)
+        if mode in ("vmap", "shard_map"):
+            if not (self.uniform() and self.traceable()):
+                raise ValueError(
+                    f"mode {mode!r} needs uniform, traceable sub-streams "
+                    "(use mode='interleave' or 'auto')")
+            return self._execute_stacked(mem, sharded=(mode == "shard_map"))
+        raise ValueError(f"unknown mode {mode!r}")
+
+    def _execute_interleaved(self, mem: jnp.ndarray) -> jnp.ndarray:
+        """Round-robin over sub-streams at fused-group granularity — the
+        host stands in for the per-cluster DMA engines, issuing one group
+        per cluster per turn. Order across sub-streams is irrelevant by
+        construction, so this is bit-identical to serial execution."""
+        windows = [mem[s.lo:s.hi] for s in self.substreams]
+        stats = [s.stream._fresh_stats() for s in self.substreams]
+        cursors = [0] * len(self.substreams)
+        done = 0
+        while done < len(self.substreams):
+            done = 0
+            for i, sub in enumerate(self.substreams):
+                groups = sub.stream.groups
+                if cursors[i] >= len(groups):
+                    done += 1
+                    continue
+                windows[i] = groups[cursors[i]].run(windows[i], stats[i])
+                cursors[i] += 1
+        for sub, w in zip(self.substreams, windows):
+            for glo, ghi in sub.write_ranges:
+                mem = mem.at[glo:ghi].set(w[glo - sub.lo:ghi - sub.lo])
+        self.stats["interleave_turns"] = max(
+            (len(s.stream.groups) for s in self.substreams), default=0)
+        return mem
+
+    def _stacked_body(self):
+        groups = self.substreams[0].stream.groups
+
+        def body(window):
+            st = self.substreams[0].stream._fresh_stats()
+            for g in groups:
+                window = g.run(window, st)
+            return window
+        return body
+
+    def _execute_stacked(self, mem: jnp.ndarray, sharded: bool) -> jnp.ndarray:
+        """One jitted computation: gather lanes, run the shared program on
+        every lane (vmap, optionally sharded over the cluster mesh axis),
+        scatter the write ranges back — no per-stream dispatch round trips."""
+        subs = self.substreams
+        key = "shard" if sharded else "vmap"
+        if key not in self._jitted:
+            body = self._stacked_body()
+            n_lanes = len(subs)
+            if sharded:
+                from jax.sharding import Mesh, PartitionSpec as P
+                from repro.distributed.compat import shard_map
+                n_dev = min(len(jax.devices()), n_lanes)
+                self.stats["n_devices_used"] = n_dev
+                mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("cluster",))
+                pad = (-n_lanes) % n_dev
+                inner = shard_map(lambda w: jax.vmap(body)(w), mesh=mesh,
+                                  in_specs=(P("cluster"),),
+                                  out_specs=P("cluster"))
+            else:
+                pad = 0
+                inner = jax.vmap(body)
+
+            def run(m):
+                lanes = jnp.stack([m[s.lo:s.hi] for s in subs])
+                if pad:
+                    lanes = jnp.concatenate(
+                        [lanes,
+                         jnp.zeros((pad, lanes.shape[1]), lanes.dtype)])
+                out = inner(lanes)
+                for i, sub in enumerate(subs):
+                    for glo, ghi in sub.write_ranges:
+                        m = m.at[glo:ghi].set(
+                            out[i, glo - sub.lo:ghi - sub.lo])
+                return m
+
+            self._jitted[key] = jax.jit(run)
+        return self._jitted[key](mem)

@@ -47,7 +47,14 @@ _ELEM_BYTES = 4
 #: (opcode -> epilogue kind); 2-read kinds stream one external operand.
 _EPILOGUE_FORMS = {Opcode.RELU: "relu", Opcode.THRESH: "thresh",
                    Opcode.ADD: "residual", Opcode.MUL: "mul",
+                   Opcode.SUB: "sub", Opcode.MASK: "mask",
                    Opcode.AXPY: "axpy"}
+#: epilogue kinds streaming a full (m, n) matrix operand
+_MATRIX_EPILOGUES = ("residual", "mul", "sub", "mask")
+
+#: reducing opcodes with a fused chain-tail form (chain -> VSUM/MAX/MIN):
+#: the chain value is reduced in-register, one pass total.
+_REDUCE_TAILS = {Opcode.VSUM: "sum", Opcode.MAX: "max", Opcode.MIN: "min"}
 
 
 # ----------------------------------------------------------------------
@@ -165,6 +172,37 @@ class FusedChain:
 
 
 @dataclasses.dataclass
+class FusedChainReduce:
+    """Elementwise chain with a reduction tail: the chain value is written
+    back once AND reduced in-register in the same pass (softmax-style
+    numerator/denominator patterns)."""
+
+    descs: List[Descriptor]
+    n: int
+    x_base: int
+    out_base: int
+    stages: List[Tuple[str, float]]
+    y_bases: List[int]
+    red_op: str                          # "sum" | "max" | "min"
+    red_base: int                        # scalar output address
+    fused: bool = True
+
+    def bytes_moved(self) -> int:
+        return _ELEM_BYTES * (self.n * (2 + len(self.y_bases)) + 1)
+
+    def run(self, mem: jnp.ndarray, stats: dict) -> jnp.ndarray:
+        n = self.n
+        x = mem[self.x_base:self.x_base + n][None]
+        ys = tuple(mem[b:b + n][None] for b in self.y_bases)
+        out, red = ops.chain_reduce(self.stages, self.red_op, x, ys)
+        stats["gathers"] += 1
+        stats["operand_gathers"] += len(ys)
+        stats["scatters"] += 2
+        mem = mem.at[self.out_base:self.out_base + n].set(out[0])
+        return mem.at[self.red_base].set(red[0].astype(jnp.float32))
+
+
+@dataclasses.dataclass
 class FusedGemm:
     """GEMM whose trailing streaming commands run as a store epilogue."""
 
@@ -191,7 +229,7 @@ class FusedGemm:
             if kind == "bias":
                 ep.append(("bias", mem[base:base + n]))
                 stats["operand_gathers"] += 1
-            elif kind in ("residual", "mul"):
+            elif kind in _MATRIX_EPILOGUES:
                 ep.append((kind, jnp.reshape(mem[base:base + m * n], (m, n))))
                 stats["operand_gathers"] += 1
             elif kind in ("scale", "thresh"):
@@ -207,14 +245,29 @@ class FusedGemm:
 # ----------------------------------------------------------------------
 # The planner
 # ----------------------------------------------------------------------
-def _plan_chain(descs: List[Descriptor], i: int) -> Optional[FusedChain]:
-    """Greedy in-place elementwise chain starting at descs[i].
+def _match_reduce_tail(d: Descriptor, n: int, t_base: int) -> Optional[str]:
+    """A VSUM/MAX/MIN over exactly the chain region T, one reduction over
+    the whole stream with a single scalar store — the softmax-style tail.
+    Returns the reduce op name, or None."""
+    if (d.opcode in _REDUCE_TAILS and len(d.bounds) == 1
+            and d.bounds[0] == n and d.init_level == 1 and d.store_level == 1
+            and d.agu0.base == t_base and d.agu0.strides[0] == 1
+            and d.agu2.strides[0] == 0):
+        return _REDUCE_TAILS[d.opcode]
+    return None
+
+
+def _plan_chain(descs: List[Descriptor], i: int):
+    """Greedy in-place elementwise chain starting at descs[i], with an
+    optional fused reduction tail.
 
     Legality (vs. folding engine.execute): every command writes the SAME
     contiguous region T (so skipping the intermediate stores is invisible
     — each is overwritten by the final one), every follow-up reads its
     primary stream from T (value carried in registers), and every external
     second operand is disjoint from T (it must observe pre-chain memory).
+    A VSUM/MAX/MIN tail reading exactly T consumes the carried value in the
+    same pass; its scalar store runs last, matching sequential order.
     """
     d0 = descs[i]
     if not _is_stream_ew(d0):
@@ -241,9 +294,15 @@ def _plan_chain(descs: List[Descriptor], i: int) -> Optional[FusedChain]:
         chain.append(d)
         stages.append((_EW_OPS[d.opcode], d.imm))
         j += 1
+    x_base = d0.agu0.base if d0.reads_per_iter >= 1 else t_base
+    if j < len(descs):
+        red = _match_reduce_tail(descs[j], n, t_base)
+        if red is not None:
+            return FusedChainReduce(chain + [descs[j]], n, x_base, t_base,
+                                    stages, y_bases, red,
+                                    descs[j].agu2.base)
     if len(chain) < 2:
         return None
-    x_base = d0.agu0.base if d0.reads_per_iter >= 1 else t_base
     return FusedChain(chain, n, x_base, t_base, stages, y_bases)
 
 
@@ -278,7 +337,7 @@ def _plan_gemm(descs: List[Descriptor], i: int) -> Optional[FusedGemm]:
         if kind == "axpy":               # imm * C + y: scale then residual
             stages.append(("scale", d.imm, None))
             stages.append(("residual", 0.0, d.agu1.base))
-        elif kind in ("residual", "mul"):
+        elif kind in _MATRIX_EPILOGUES:
             stages.append((kind, 0.0, d.agu1.base))
         else:
             stages.append((kind, d.imm, None))

@@ -28,7 +28,7 @@ from . import compat
 
 
 #: Epilogue stage kinds that carry a streamed array operand (in order).
-EPILOGUE_ARRAY_KINDS = ("bias", "residual", "mul")
+EPILOGUE_ARRAY_KINDS = ("bias", "residual", "mul", "sub", "mask")
 #: All supported epilogue kinds.
 EPILOGUE_KINDS = EPILOGUE_ARRAY_KINDS + ("scale", "relu", "thresh",
                                          "silu", "gelu")
@@ -53,6 +53,12 @@ def apply_epilogue(acc, stages, operands):
             i += 1
         elif kind == "mul":          # * full matrix (e.g. a gate)
             acc = acc * operands[i].astype(jnp.float32)
+            i += 1
+        elif kind == "sub":          # - full matrix (SUB: acc - rd1)
+            acc = acc - operands[i].astype(jnp.float32)
+            i += 1
+        elif kind == "mask":         # MASK: keep acc where rd1 != 0
+            acc = jnp.where(operands[i] != 0, acc, jnp.zeros_like(acc))
             i += 1
         elif kind == "scale":
             acc = acc * jnp.float32(imm)

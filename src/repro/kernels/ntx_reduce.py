@@ -17,6 +17,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from . import compat
+from .ntx_elementwise import _apply_op, _OPS2
 
 _INIT = {"sum": 0.0, "min": float("inf"), "max": float("-inf"),
          "argmin": float("inf"), "argmax": float("-inf")}
@@ -55,6 +56,79 @@ def _reduce_kernel(x_ref, o_ref, acc_ref, idx_ref, *, op: str, nk: int,
             o_ref[...] = idx_ref[...].astype(o_ref.dtype)
         else:
             o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _chain_reduce_kernel(*refs, stages, n_ys: int, red: str, nk: int,
+                         block: int, n_valid: int):
+    """Chain stages applied per block, the chain value written back AND
+    accumulated into the reduction in the same pass — the paper's streaming
+    ops feeding the wide accumulator without a second TCDM trip."""
+    x_ref = refs[0]
+    y_refs = refs[1:1 + n_ys]
+    o_ref, r_ref = refs[1 + n_ys], refs[2 + n_ys]
+    acc_ref = refs[3 + n_ys]
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.full_like(acc_ref, _INIT[red])
+
+    val = x_ref[...]
+    yi = 0
+    for op, imm in stages:
+        y = None
+        if op in _OPS2:
+            y = y_refs[yi][...]
+            yi += 1
+        val = _apply_op(op, val, y, imm)
+    o_ref[...] = val
+
+    # padded columns must contribute the reduction identity
+    col = k * block + jax.lax.broadcasted_iota(jnp.int32, val.shape, 1)
+    v = jnp.where(col < n_valid, val.astype(jnp.float32), _INIT[red])
+    if red == "sum":
+        acc_ref[...] += v.sum(-1, keepdims=True)
+    elif red == "min":
+        acc_ref[...] = jnp.minimum(acc_ref[...], v.min(-1, keepdims=True))
+    else:
+        acc_ref[...] = jnp.maximum(acc_ref[...], v.max(-1, keepdims=True))
+
+    @pl.when(k == nk - 1)
+    def _store():
+        r_ref[...] = acc_ref[...]
+
+
+def chain_reduce_pallas(stages, red: str, x: jnp.ndarray, ys: tuple = (),
+                        n_valid: int | None = None, block: int = 512,
+                        interpret: bool = False):
+    """Fused elementwise chain + reduction tail over (rows, n).
+
+    Returns (chain_out (rows, n), reduction (rows, 1)). ``red`` is one of
+    sum/min/max; ``n_valid`` masks padded columns out of the reduction.
+    """
+    assert red in ("sum", "min", "max"), red
+    stages = tuple((str(op), float(imm)) for op, imm in stages)
+    n_ys = sum(1 for op, _ in stages if op in _OPS2)
+    assert len(ys) == n_ys, (len(ys), n_ys)
+    rows, n = x.shape
+    assert n % block == 0, (n, block)
+    nk = n // block
+    n_valid = n if n_valid is None else n_valid
+    spec = pl.BlockSpec((rows, block), lambda r, k: (r, k))
+    args = (x,) + tuple(ys)
+    return pl.pallas_call(
+        functools.partial(_chain_reduce_kernel, stages=stages, n_ys=n_ys,
+                          red=red, nk=nk, block=block, n_valid=n_valid),
+        grid=(1, nk),
+        in_specs=[spec] * len(args),
+        out_specs=(spec, pl.BlockSpec((rows, 1), lambda r, k: (r, 0))),
+        out_shape=(jax.ShapeDtypeStruct((rows, n), x.dtype),
+                   jax.ShapeDtypeStruct((rows, 1), jnp.float32)),
+        scratch_shapes=[pltpu.VMEM((rows, 1), jnp.float32)],
+        compiler_params=compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(*args)
 
 
 def reduce_pallas(op: str, x: jnp.ndarray, block: int = 512,

@@ -13,6 +13,8 @@ from __future__ import annotations
 
 import contextlib
 import functools
+import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +24,7 @@ from . import ref
 from .ntx_gemm import EPILOGUE_ARRAY_KINDS, gemm_pallas
 from .ntx_elementwise import (_OPS2, adamw_pallas, elementwise_chain_pallas,
                               elementwise_pallas)
-from .ntx_reduce import reduce_pallas
+from .ntx_reduce import chain_reduce_pallas, reduce_pallas
 from .ntx_conv import conv2d_pallas
 from .ntx_stencil import stencil1d_pallas
 from .flash_attention import flash_attention_pallas
@@ -72,14 +74,62 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0):
 
 
 # ----------------------------------------------------------------------
-# GEMM block autotuning: scheduler-derived sizes, cached per shape
+# GEMM block autotuning: scheduler-derived sizes, cached per shape.
+# NTX_AUTOTUNE=measure additionally times 2-3 candidate triples on first
+# sight of a shape (real-TPU measure-and-pick); the scheduler model is
+# the default and the fallback.
 # ----------------------------------------------------------------------
 _BLOCK_CACHE: dict = {}
-_BLOCK_CACHE_STATS = {"hits": 0, "misses": 0}
+_BLOCK_CACHE_STATS = {"hits": 0, "misses": 0, "measured": 0}
 
 
 def _align_up(x: int, mult: int) -> int:
     return max(mult, -(-x // mult) * mult)
+
+
+def _autotune_measure() -> bool:
+    return os.environ.get("NTX_AUTOTUNE", "model") == "measure"
+
+
+def _candidate_blocks(m: int, n: int, k: int, base) -> list:
+    """The model's pick plus nearby triples worth racing (smaller k-slab;
+    smaller m-panel), clipped to the padded problem and deduplicated."""
+    bm, bn, bk = base
+    cands = [base, (bm, bn, max(128, bk // 2)), (max(8, bm // 2), bn, bk)]
+    out, seen = [], set()
+    for c in cands:
+        c = (min(c[0], _align_up(m, 8)), min(c[1], _align_up(n, 128)),
+             min(c[2], _align_up(k, 128)))
+        if c not in seen:
+            seen.add(c)
+            out.append(c)
+    return out
+
+
+def _measure_pick(m: int, n: int, k: int, base) -> tuple[int, int, int]:
+    """Race the candidate triples on a representative GEMM and keep the
+    fastest (first sight of a shape only — the result is cached)."""
+    a = jnp.ones((m, k), jnp.float32)
+    b = jnp.ones((k, n), jnp.float32)
+    best, best_t = base, float("inf")
+    for cand in _candidate_blocks(m, n, k, base):
+        bm, bn, bk = cand
+        a2, _ = _pad_to(a, 0, bm)
+        a2, _ = _pad_to(a2, 1, bk)
+        b2, _ = _pad_to(b, 0, bk)
+        b2, _ = _pad_to(b2, 1, bn)
+        try:
+            run = lambda: gemm_pallas(a2, b2, block_m=bm, block_n=bn,
+                                      block_k=bk, interpret=_interp())
+            jax.block_until_ready(run())       # compile + warm
+            t0 = time.perf_counter()
+            jax.block_until_ready(run())
+            dt = time.perf_counter() - t0
+        except Exception:
+            continue                           # candidate does not lower
+        if dt < best_t:
+            best, best_t = cand, dt
+    return best
 
 
 def matmul_blocks(m: int, n: int, k: int,
@@ -88,7 +138,9 @@ def matmul_blocks(m: int, n: int, k: int,
     scheduler's VMEM sizing (``scheduler.pick_matmul_blocks``), aligned to
     the TPU tiling the kernels assume (sublane 8 / lane 128) and cached
     per shape — the autotune cache. Wrappers pad operands up to the block
-    multiples, so alignment never exceeds the old padding behaviour."""
+    multiples, so alignment never exceeds the old padding behaviour.
+    With ``NTX_AUTOTUNE=measure`` and a Pallas backend active, the first
+    sight of a shape races candidate triples and caches the winner."""
     key = (m, n, k, dtype_bytes)
     hit = _BLOCK_CACHE.get(key)
     if hit is not None:
@@ -98,6 +150,9 @@ def matmul_blocks(m: int, n: int, k: int,
     from repro.core.scheduler import pick_matmul_blocks
     bm, bn, bk = pick_matmul_blocks(m, n, k, dtype_bytes=dtype_bytes)
     blocks = (_align_up(bm, 8), _align_up(bn, 128), _align_up(bk, 128))
+    if _autotune_measure() and _pallas():
+        blocks = _measure_pick(m, n, k, blocks)
+        _BLOCK_CACHE_STATS["measured"] += 1
     _BLOCK_CACHE[key] = blocks
     return blocks
 
@@ -133,6 +188,10 @@ def _ref_epilogue(c: jnp.ndarray, epilogue) -> jnp.ndarray:
             c = c + operand.astype(jnp.float32)
         elif kind == "mul":
             c = c * operand.astype(jnp.float32)
+        elif kind == "sub":
+            c = c - operand.astype(jnp.float32)
+        elif kind == "mask":
+            c = jnp.where(operand != 0, c, jnp.zeros_like(c))
         elif kind == "scale":
             c = c * jnp.float32(imm)
         elif kind == "relu":
@@ -177,7 +236,7 @@ def gemm(a: jnp.ndarray, b: jnp.ndarray, out_dtype=jnp.float32,
     for kind, imm, operand in epilogue:
         if kind == "bias":
             op2, _ = _pad_to(operand.reshape(1, -1), 1, bn)
-        elif kind in ("residual", "mul"):
+        elif kind in EPILOGUE_ARRAY_KINDS:
             op2, _ = _pad_to(operand, 0, bm)
             op2, _ = _pad_to(op2, 1, bn)
         else:
@@ -279,6 +338,36 @@ def elementwise_chain(stages, x: jnp.ndarray, ys=()) -> jnp.ndarray:
     return out[:, :n0].reshape(shape)
 
 
+def chain_reduce(stages, red: str, x: jnp.ndarray, ys=()):
+    """Fused chain + reduction tail over the last axis of (rows, n).
+
+    ``stages`` as in :func:`elementwise_chain`; ``red`` is sum/min/max.
+    Returns ``(chain_out (rows, n), reduction (rows,))`` — the chain value
+    is materialized once AND reduced in-register in the same pass (the
+    descriptor stream's chain -> VSUM/MAX tail, e.g. a softmax-style
+    masked-probability sum).
+    """
+    stages = tuple((str(op), float(imm)) for op, imm in stages)
+    ys = tuple(ys)
+    if not _pallas():
+        val = x
+        yi = 0
+        for op, imm in stages:
+            y = None
+            if op in _OPS2:
+                y = ys[yi]
+                yi += 1
+            val = ref.elementwise(op, val, y, imm)
+        return val, ref.reduce(red, val)
+    rows, n = x.shape
+    block = 512 if n >= 512 else 128
+    xf, n0 = _pad_to(x, 1, block)
+    yfs = tuple(_pad_to(y, 1, block)[0] for y in ys)
+    out, red_v = chain_reduce_pallas(stages, red, xf, yfs, n_valid=n0,
+                                     block=block, interpret=_interp())
+    return out[:, :n0], red_v[:, 0]
+
+
 # ----------------------------------------------------------------------
 # Reductions
 # ----------------------------------------------------------------------
@@ -360,6 +449,35 @@ def _flash_block(n: int, cap: int) -> int:
     return 0
 
 
+def _attention_chain_reduce(q, k, v, *, causal, scale, q_offset):
+    """Attention for shapes the flash kernel cannot tile, composed from the
+    streaming command set: per-row MAX for the stabilizer, then the masked
+    probabilities and their softmax normalizer in ONE fused pass — the
+    MASK chain stage feeding a VSUM tail (``chain_reduce``)."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = (d ** -0.5) if scale is None else scale
+    qg = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg,
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        valid = (jnp.arange(skv)[None, :] <= qpos).astype(jnp.float32)
+    else:
+        valid = jnp.ones((sq, skv), jnp.float32)
+    validf = jnp.broadcast_to(valid[None, None, None], logits.shape)
+    rows = b * hkv * g * sq
+    lm = jnp.where(validf > 0, logits, -1e30).reshape(rows, skv)
+    m = reduce("max", lm)
+    p = jnp.exp(lm - m[:, None])
+    pm, denom = chain_reduce([("mask", 0.0)], "sum", p,
+                             ys=(validf.reshape(rows, skv),))
+    pm = (pm / denom[:, None]).reshape(b, hkv, g, sq, skv)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", pm, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, v.shape[-1]).astype(q.dtype)
+
+
 def attention(q, k, v, *, causal: bool = True, scale=None,
               kv_len: int | None = None) -> jnp.ndarray:
     """q: (b, hq, sq, d); k/v: (b, hkv, skv, d)."""
@@ -386,10 +504,11 @@ def attention(q, k, v, *, causal: bool = True, scale=None,
     bk = _flash_block(skv, bn)
     if bq == 0 or bk == 0:
         # no aligned block divides the sequence (e.g. prime lengths): the
-        # kernel cannot tile it — use the jnp oracle
+        # flash kernel cannot tile it — compose the online softmax from
+        # the streaming command set (MASK chain -> VSUM tail in one pass)
         eff = skv if kv_len is None else kv_len
-        return ref.mha(q, k, v, causal=causal, scale=scale,
-                       q_offset=eff - sq)
+        return _attention_chain_reduce(q, k, v, causal=causal, scale=scale,
+                                       q_offset=eff - sq)
     return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
                                   kv_len=kv_len, block_q=bq,
                                   block_k=bk, interpret=_interp())

@@ -5,6 +5,12 @@ Continuous-batching-lite: a fixed decode batch of slots; finished requests
 prefilled into the freed slot. Sampling uses the NTX ARGMAX command
 (greedy) or temperature sampling. Works for all decoder archs, including
 SSM/hybrid state caches.
+
+Greedy sampling routes through the multi-cluster stream scheduler
+(``core.multistream``): each request's ARGMAX over its logits row is an
+independent descriptor sub-stream (disjoint AGU ranges), so the batch
+partitions request-per-cluster and executes concurrently on the mesh —
+the serving-side use of the paper's independent per-cluster streams.
 """
 from __future__ import annotations
 
@@ -27,6 +33,38 @@ class ServeConfig:
     eos_token: int = 1
     temperature: float = 0.0
     seed: int = 0
+    multistream: bool = True        # greedy argmax via the cluster scheduler
+
+
+_ARGMAX_SCHEDULERS: Dict[tuple, Any] = {}
+
+
+def greedy_argmax_multistream(logits) -> np.ndarray:
+    """Greedy sampling as a multi-cluster descriptor program.
+
+    Builds one ARGMAX command per request row (independent sub-streams over
+    a flat memory: [row 0 | slot 0 | row 1 | slot 1 | ...]) and dispatches
+    the graph across the cluster mesh; the scheduler (and its jitted
+    stacked program) is cached per batch shape, so steady-state decode pays
+    one dispatch. Ties resolve to the first maximum, matching ``np.argmax``.
+    """
+    from repro.core import argmax as argmax_desc
+    from repro.core.multistream import ClusterScheduler
+    logits = jnp.asarray(logits, jnp.float32)
+    b, vocab = logits.shape
+    sched = _ARGMAX_SCHEDULERS.get((b, vocab))
+    if sched is None:
+        # [row i | slot i] per request: sub-stream windows are disjoint and
+        # uniform, so the scheduler can stack them (vmap/shard_map lanes)
+        descs = [argmax_desc(vocab, i * (vocab + 1), i * (vocab + 1) + vocab)
+                 for i in range(b)]
+        sched = ClusterScheduler(descs)
+        _ARGMAX_SCHEDULERS[(b, vocab)] = sched
+    mem = jnp.concatenate([logits, jnp.zeros((b, 1), jnp.float32)],
+                          axis=1).reshape(-1)
+    out = sched.execute(mem)
+    slots = out.reshape(b, vocab + 1)[:, vocab]
+    return np.asarray(slots, np.float32).astype(np.int64)
 
 
 class Server:
@@ -36,6 +74,8 @@ class Server:
         self._decode = jax.jit(self.model.decode)
 
     def _sample(self, logits: jnp.ndarray, rng) -> np.ndarray:
+        if self.scfg.temperature <= 0 and self.scfg.multistream:
+            return greedy_argmax_multistream(logits)
         logits = np.asarray(logits, np.float32)
         if self.scfg.temperature <= 0:
             return logits.argmax(-1)

@@ -48,6 +48,7 @@ class TrainConfig:
     global_batch: int = 8
     seq_len: int = 128
     grad_compression: str = "none"  # none | int8 (shard_map DP reduce)
+    multistream_plan: bool = True   # schedule the per-tensor update streams
 
 
 def microbatches(batch, accum: int):
@@ -132,6 +133,40 @@ def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
                                   NamedSharding(mesh, P()), None))
 
 
+def plan_update_multistream(params, n_clusters: Optional[int] = None
+                            ) -> Dict[str, Any]:
+    """Schedule the optimizer update as a multi-cluster descriptor program.
+
+    Each parameter tensor's AXPY-class update (grad stream in, param stream
+    in/out) is one descriptor over its own address range, so every tensor
+    is an independent sub-stream; the cluster scheduler load-balances them
+    over the mesh (layer-per-cluster, the paper's DNN-training split) and
+    prices the critical path vs. serial execution.
+    """
+    from repro.core import Agu, Descriptor, Opcode
+    from repro.core.multistream import ClusterScheduler
+    leaves = jax.tree_util.tree_leaves(params)
+    descs = []
+    off = 0
+    for leaf in leaves:
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        # [grad_i | param_i] regions, laid out tensor after tensor
+        descs.append(Descriptor(
+            bounds=(n,), opcode=Opcode.AXPY, imm=-1.0,
+            agu0=Agu(off, (1,)), agu1=Agu(off + n, (1,)),
+            agu2=Agu(off + n, (1,))))
+        off += 2 * n
+    if n_clusters is None:
+        n_clusters = max(1, len(jax.devices()))
+    sched = ClusterScheduler(descs, n_clusters=n_clusters)
+    return {"n_substreams": len(sched.substreams),
+            "n_clusters": sched.n_clusters,
+            "assignment": list(sched.assignment),
+            "critical_path_s": max(sched.cluster_times()),
+            "serial_time_s": sum(sched.costs),
+            "model_speedup": sched.model_speedup()}
+
+
 class Trainer:
     def __init__(self, cfg: ArchConfig, opt_cfg: AdamWConfig,
                  tcfg: TrainConfig, mesh: Optional[Mesh] = None):
@@ -155,6 +190,8 @@ class Trainer:
         params = self.model.init(tcfg.seed)
         opt_state = init_opt_state(params)
         start = 0
+        if tcfg.multistream_plan:
+            self.stats["multistream"] = plan_update_multistream(params)
 
         state_like = {"params": params, "opt": opt_state,
                       "data_step": jnp.zeros((), jnp.int32)}

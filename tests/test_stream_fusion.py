@@ -211,3 +211,149 @@ def test_plan_stream_groups():
     groups = plan_stream(descs)
     assert [g.fused for g in groups] == [True, False]
     assert len(groups[0].descs) == 2 and len(groups[1].descs) == 1
+
+
+# ----------------------------------------------------------------------
+# Chain -> reduction tails (softmax-style patterns in one pass)
+# ----------------------------------------------------------------------
+def _red(op, n, src, dst):
+    return Descriptor(bounds=(n,), opcode=op, init_level=1, store_level=1,
+                      agu0=Agu(src, (1,)), agu2=Agu(dst, (0,)))
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
+@pytest.mark.parametrize("red_op", [Opcode.VSUM, Opcode.MAX, Opcode.MIN])
+def test_chain_reduce_tail_fuses(backend, red_op):
+    """chain -> VSUM/MAX/MIN fuses into ONE group: the chain value is
+    written back and reduced in-register in the same pass."""
+    n = 300
+    descs = [_ew(Opcode.THRESH, n, 0, 1024, imm=0.2),
+             _ew(Opcode.RELU, n, 1024, 1024),
+             _red(red_op, n, 1024, 5000)]
+    mem = _mem()
+    cs = CommandStream(descs)
+    assert cs.stats["n_groups"] == 1
+    assert cs.stats["n_fused_groups"] == 1
+    with ops.backend(backend):
+        got = np.asarray(cs.execute(mem))
+    np.testing.assert_allclose(got, _oracle(descs, mem), rtol=1e-5,
+                               atol=1e-5)
+    assert cs.stats["gathers"] == 1
+    # fused traffic: stream in + chain out + the scalar
+    assert cs.bytes_moved() == 4 * (2 * n + 1)
+    assert cs.bytes_sequential() == 4 * (5 * n + 1)
+
+
+def test_single_command_reduce_tail_fuses():
+    """Even a single streaming command + reduce tail runs as one pass."""
+    n = 128
+    descs = [_ew(Opcode.RELU, n, 0, 1024), _red(Opcode.VSUM, n, 1024, 4000)]
+    cs = CommandStream(descs)
+    assert cs.stats["n_fused_groups"] == 1 and cs.stats["n_groups"] == 1
+    mem = _mem()
+    got = np.asarray(cs.execute(mem))
+    np.testing.assert_allclose(got, _oracle(descs, mem), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_reduce_tail_wrong_region_not_fused():
+    """A reduction over a different region must NOT fuse into the chain."""
+    n = 128
+    descs = [_ew(Opcode.THRESH, n, 0, 1024, imm=0.1),
+             _ew(Opcode.RELU, n, 1024, 1024),
+             _red(Opcode.VSUM, n, 2048, 4000)]     # reads elsewhere
+    cs = CommandStream(descs)
+    assert cs.stats["n_fused_groups"] == 1         # just the 2-op chain
+    assert cs.stats["n_groups"] == 2
+    mem = _mem()
+    np.testing.assert_allclose(np.asarray(cs.execute(mem)),
+                               _oracle(descs, mem), rtol=1e-5, atol=1e-5)
+
+
+def test_ops_chain_reduce_matches_fold():
+    """ops.chain_reduce == folding elementwise then reduce, both backends."""
+    x = RNG.standard_normal((4, 200)).astype(np.float32)
+    y = RNG.standard_normal((4, 200)).astype(np.float32)
+    want_val = np.maximum(np.where(x > 0.1, x, 0), 0) * y
+    for backend in ("ref", "pallas_interpret"):
+        with ops.backend(backend):
+            out, red = ops.chain_reduce(
+                [("thresh", 0.1), ("relu", 0.0), ("mul", 0.0)], "sum",
+                jnp.asarray(x), ys=(jnp.asarray(y),))
+        np.testing.assert_allclose(out, want_val, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(red, want_val.sum(-1), rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_attention_fallback_uses_chain_reduce():
+    """Prime-length attention (no aligned flash tiling) runs the streaming
+    softmax composition and matches the jnp oracle."""
+    q = RNG.standard_normal((2, 4, 13, 16)).astype(np.float32)
+    k = RNG.standard_normal((2, 2, 17, 16)).astype(np.float32)
+    v = RNG.standard_normal((2, 2, 17, 16)).astype(np.float32)
+    want = np.asarray(ref.mha(q, k, v, causal=True, q_offset=4))
+    with ops.backend("pallas_interpret"):
+        got = np.asarray(ops.attention(jnp.asarray(q), jnp.asarray(k),
+                                       jnp.asarray(v), causal=True))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# ----------------------------------------------------------------------
+# MASK / SUB store-epilogue coverage
+# ----------------------------------------------------------------------
+def test_gemm_sub_mask_epilogue_fusion():
+    """GEMM + SUB + MASK streaming commands fuse as store epilogues and
+    match the engine oracle."""
+    m_, n_, k_ = 12, 9, 17
+    c0 = 2048
+    dg = gemm(m_, n_, k_, 0, 1024, c0)
+    dsub = _ew(Opcode.SUB, m_ * n_, c0, c0, y=3000)
+    dmask = _ew(Opcode.MASK, m_ * n_, c0, c0, y=3200)
+    mem = _mem()
+    mem[3200:3200 + m_ * n_] = (RNG.random(m_ * n_) > 0.5).astype(np.float32)
+    cs = CommandStream([dg, dsub, dmask])
+    assert cs.stats["n_fused_groups"] == 1 and cs.stats["n_groups"] == 1
+    got = np.asarray(cs.execute(mem))
+    np.testing.assert_allclose(got, _oracle([dg, dsub, dmask], mem),
+                               rtol=1e-4, atol=1e-4)
+    assert cs.stats["scatters"] == 1
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas_interpret"])
+def test_gemm_sub_mask_epilogue_matches_ref(backend):
+    a = RNG.standard_normal((50, 30)).astype(np.float32)
+    b = RNG.standard_normal((30, 40)).astype(np.float32)
+    s = RNG.standard_normal((50, 40)).astype(np.float32)
+    msk = (RNG.random((50, 40)) > 0.5).astype(np.float32)
+    want = np.asarray(ref.gemm(a, b), np.float64)
+    want = np.where(msk != 0, want - s, 0.0)
+    with ops.backend(backend):
+        got = np.asarray(ops.gemm(a, b, epilogue=[("sub", s),
+                                                  ("mask", msk)]))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# Measure-and-pick autotune (NTX_AUTOTUNE=measure)
+# ----------------------------------------------------------------------
+def test_autotune_measure_and_pick(monkeypatch):
+    """With NTX_AUTOTUNE=measure and a Pallas backend, first sight of a
+    shape races candidate triples; the winner is cached and correct."""
+    monkeypatch.setenv("NTX_AUTOTUNE", "measure")
+    ops._BLOCK_CACHE.clear()
+    before = ops.block_cache_stats()["measured"]
+    a = RNG.standard_normal((16, 12)).astype(np.float32)
+    b = RNG.standard_normal((12, 20)).astype(np.float32)
+    with ops.backend("pallas_interpret"):
+        got = np.asarray(ops.gemm(a, b))
+        blocks = ops.matmul_blocks(16, 20, 12)    # cache hit, no re-measure
+    assert ops.block_cache_stats()["measured"] == before + 1
+    bm, bn, bk = blocks
+    assert bm % 8 == 0 and bn % 128 == 0 and bk % 128 == 0
+    np.testing.assert_allclose(got, np.asarray(ref.gemm(a, b)),
+                               rtol=1e-4, atol=1e-4)
+    # model-only sizing stays the default
+    monkeypatch.setenv("NTX_AUTOTUNE", "model")
+    ops._BLOCK_CACHE.clear()
+    ops.matmul_blocks(16, 20, 12)
+    assert ops.block_cache_stats()["measured"] == before + 1
