@@ -12,12 +12,20 @@ trajectory files can be diffed across PRs. Sections:
               Pallas interpret-mode sanity numbers)
   fusion      fused command-stream execution vs per-descriptor dispatch
   multistream multi-cluster stream-graph scheduling vs serial dispatch
+  pipeline    stage-pipelined dependent sub-streams vs serial dispatch
   roofline    TPU roofline table from the dry-run artifacts (if present)
 
-JSON schema (stable; bump ``schema_version`` on breaking changes):
+``--quick`` shrinks workload sizes/reps for a CI smoke run (same sections,
+same schema, same derived keys — only the numbers are smaller).
+
+JSON schema (stable):
   {"schema_version": 1,
    "sections": {<section>: [{"name": str, "us_per_call": float,
                              "derived": float | str}, ...]}}
+Bump rules: ``schema_version`` changes ONLY on breaking changes (removing
+or renaming a key, changing a field's meaning/type). Adding a section or
+rows is non-breaking and must NOT bump it — cross-PR diffs rely on that.
+tests/test_pipeline.py runs ``--json --quick`` and pins these rules.
 """
 from __future__ import annotations
 
@@ -29,6 +37,7 @@ import numpy as np
 
 _ROWS: list = []
 _JSON = False
+_QUICK = False
 
 
 def emit(name: str, us: float, derived) -> None:
@@ -96,8 +105,9 @@ def bench_fig6_7():
 
 def bench_precision():
     from repro.core.precision import conv_layer_rmse_study
-    us = _t(conv_layer_rmse_study, reps=1, n_outputs=64)
-    r = conv_layer_rmse_study(n_outputs=128)
+    n_out = 16 if _QUICK else 64
+    us = _t(conv_layer_rmse_study, reps=1, n_outputs=n_out)
+    r = conv_layer_rmse_study(n_outputs=32 if _QUICK else 128)
     for k, v in r.items():
         emit(f"precision.{k}", us, f"{v:.4g}")
 
@@ -141,7 +151,7 @@ def bench_fusion():
     rng = np.random.default_rng(0)
 
     # --- 3-op elementwise chain over a 1M-element stream -------------
-    n = 1 << 20
+    n = 1 << (12 if _QUICK else 20)
     mem = jnp.asarray(rng.standard_normal(2 * n).astype(np.float32))
     chain = [
         Descriptor(bounds=(n,), opcode=Opcode.THRESH, imm=0.2,
@@ -168,7 +178,7 @@ def bench_fusion():
     emit("fusion.chain3.speedup", us_f, f"{us_s / max(us_f, 1e-9):.3f}")
 
     # --- GEMM + bias + ReLU epilogue ---------------------------------
-    m_ = 512
+    m_ = 64 if _QUICK else 512
     a = jnp.asarray(rng.standard_normal((m_, m_)).astype(np.float32))
     b = jnp.asarray(rng.standard_normal((m_, m_)).astype(np.float32))
     bias = jnp.asarray(rng.standard_normal(m_).astype(np.float32))
@@ -214,7 +224,7 @@ def bench_multistream():
     from repro.perfmodel.ntx import multistream_gain
     rng = np.random.default_rng(0)
 
-    n = 1 << 18
+    n = 1 << (12 if _QUICK else 18)
     n_streams = 4
     mem = jnp.asarray(
         rng.standard_normal(2 * n * n_streams).astype(np.float32))
@@ -263,6 +273,77 @@ def bench_multistream():
          f"{g['dma_overlap_gain']:.3f}")
 
 
+def bench_pipeline():
+    """Stage-pipelined dependent sub-streams vs serial dispatch.
+
+    A dependent-chain workload: 4 lanes, each a 3-op producer chain whose
+    output feeds a 2-op consumer chain (RAW through the staging buffer).
+    ClusterScheduler would collapse each lane to one serial component;
+    StageSchedule level-izes producers/consumers into two uniform stages
+    executed as stacked vmap lanes with an explicit handoff in between.
+    Bit-equality with the serial stream is asserted, as is model
+    speedup > 1 on >= 2 clusters.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import Agu, CommandStream, Descriptor, Opcode
+    from repro.core.multistream import StageSchedule
+    from repro.perfmodel.ntx import pipeline_gain
+    rng = np.random.default_rng(0)
+
+    n = 1 << (12 if _QUICK else 18)
+    n_lanes = 4
+    lane = 4 * n
+    mem = jnp.asarray(
+        rng.standard_normal(lane * n_lanes).astype(np.float32))
+    descs = []
+    for i in range(n_lanes):
+        x, t, u = lane * i, lane * i + n, lane * i + 2 * n
+        descs += [
+            # producer: 3-op chain x -> t
+            Descriptor(bounds=(n,), opcode=Opcode.THRESH, imm=0.2,
+                       agu0=Agu(x, (1,)), agu2=Agu(t, (1,))),
+            Descriptor(bounds=(n,), opcode=Opcode.RELU,
+                       agu0=Agu(t, (1,)), agu2=Agu(t, (1,))),
+            Descriptor(bounds=(n,), opcode=Opcode.AXPY, imm=1.5,
+                       agu0=Agu(t, (1,)), agu1=Agu(x, (1,)),
+                       agu2=Agu(t, (1,))),
+            # consumer: 2-op chain t -> u (RAW handoff on t)
+            Descriptor(bounds=(n,), opcode=Opcode.THRESH, imm=0.1,
+                       agu0=Agu(t, (1,)), agu2=Agu(u, (1,))),
+            Descriptor(bounds=(n,), opcode=Opcode.RELU,
+                       agu0=Agu(u, (1,)), agu2=Agu(u, (1,))),
+        ]
+
+    serial = CommandStream(descs)
+    sched = StageSchedule(descs, n_clusters=max(len(jax.devices()), 2))
+    emit("pipeline.workload.n_nodes", 0, sched.stats["n_nodes"])
+    emit("pipeline.workload.n_stages", 0, sched.stats["n_stages"])
+    emit("pipeline.workload.handoff_bytes", 0,
+         sched.stats["handoff_bytes"])
+
+    us_serial = _t(serial.execute, mem, reps=5)
+    us_pipe = _t(lambda m: sched.execute(m, mode="vmap"), mem, reps=5)
+    match = bool((np.asarray(serial.execute(mem))
+                  == np.asarray(sched.execute(mem, mode="vmap"))).all())
+    # the transports the timed run actually used
+    emit("pipeline.stage_modes", 0, "|".join(sched.stats["stage_modes"]))
+    emit("pipeline.serial", us_serial, serial.bytes_moved())
+    emit("pipeline.stacked_vmap", us_pipe, sched.stats["n_clusters"])
+    emit("pipeline.speedup", us_pipe,
+         f"{us_serial / max(us_pipe, 1e-9):.3f}")
+    emit("pipeline.match", 0, int(match))
+    assert match, "pipelined execution must be bit-equal to serial"
+
+    for c in (2, 4, 8):
+        g = pipeline_gain(descs, n_clusters=c)
+        emit(f"pipeline.model_speedup_c{c}", 0, f"{g['speedup']:.3f}")
+        assert g["speedup"] > 1.0, (c, g["speedup"])
+    g = pipeline_gain(descs, n_clusters=4)
+    emit("pipeline.model_handoff_bytes_cross", 0,
+         f"{g['handoff_bytes_cross']:.0f}")
+
+
 def bench_roofline():
     import os
     d = "results/dryrun"
@@ -289,6 +370,7 @@ SECTIONS = {
     "kernels": bench_kernels,
     "fusion": bench_fusion,
     "multistream": bench_multistream,
+    "pipeline": bench_pipeline,
     "roofline": bench_roofline,
 }
 
@@ -310,12 +392,15 @@ def _as_json() -> str:
 
 
 def main() -> None:
-    global _JSON
+    global _JSON, _QUICK
     args = sys.argv[1:]
     _JSON = "--json" in args
-    unknown = [a for a in args if a.startswith("--") and a != "--json"]
+    _QUICK = "--quick" in args
+    unknown = [a for a in args
+               if a.startswith("--") and a not in ("--json", "--quick")]
     if unknown:
-        raise SystemExit(f"unknown flag(s): {unknown}; supported: --json")
+        raise SystemExit(
+            f"unknown flag(s): {unknown}; supported: --json, --quick")
     which = [a for a in args if not a.startswith("--")] or list(SECTIONS)
     if not _JSON:
         print("name,us_per_call,derived")

@@ -16,8 +16,9 @@ from .scheduler import (TileSchedule, Tile, schedule_axpy, schedule_gemv,
                         pick_matmul_blocks)
 from . import precision
 from .dispatch import dispatch, dispatch_graph, dispatch_stream
-from .stream import CommandStream, plan_stream
-from .multistream import ClusterScheduler, StreamGraph, SubStream
+from .stream import CommandStream, plan_stream, program_spans
+from .multistream import (ClusterScheduler, StageSchedule, StreamGraph,
+                          SubStream)
 
 __all__ = [
     "Agu", "Descriptor", "Opcode", "axpy", "gemv", "gemm", "memcpy",
@@ -28,6 +29,6 @@ __all__ = [
     "TileSchedule", "Tile", "schedule_axpy", "schedule_gemv",
     "schedule_gemm", "schedule_conv2d", "schedule_stencil",
     "pick_matmul_blocks", "precision", "dispatch", "dispatch_stream",
-    "dispatch_graph", "CommandStream", "plan_stream",
-    "ClusterScheduler", "StreamGraph", "SubStream",
+    "dispatch_graph", "CommandStream", "plan_stream", "program_spans",
+    "ClusterScheduler", "StageSchedule", "StreamGraph", "SubStream",
 ]

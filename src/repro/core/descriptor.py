@@ -108,6 +108,9 @@ class Descriptor:
     """One NTX command: a complete affine reduction loop nest.
 
     ``bounds[l]`` is the trip count of loop level ``l`` (0 = innermost).
+    A bound of 0 is a legal zero-trip nest: the command executes no
+    iterations, stores nothing and touches no addresses (the silicon's HWL
+    simply never fires).
 
     ``init_level = L`` means the reduction spans loop levels ``0..L-1``: the
     accumulator is (re-)initialised once per iteration of the levels ``>= L``
@@ -132,8 +135,8 @@ class Descriptor:
         b = tuple(int(x) for x in self.bounds)
         if not 1 <= len(b) <= NUM_LOOPS:
             raise ValueError(f"need 1..{NUM_LOOPS} loops, got {len(b)}")
-        if any(x < 1 for x in b):
-            raise ValueError(f"loop bounds must be >= 1, got {b}")
+        if any(x < 0 for x in b):
+            raise ValueError(f"loop bounds must be >= 0, got {b}")
         if self.strict_hw and any(x > MAX_HW_COUNT for x in b):
             raise ValueError(f"bound exceeds 16-bit HWL counter: {b}")
         object.__setattr__(self, "bounds", b)

@@ -72,6 +72,9 @@ def dispatch(desc: Descriptor, mem: jnp.ndarray) -> jnp.ndarray:
     """
     mem = jnp.asarray(mem, jnp.float32)
 
+    if desc.num_iters == 0:     # zero-trip nest: no iterations, no stores
+        return mem
+
     gm = _match_gemm(desc)
     if gm is not None:
         m, n, k = gm
@@ -116,7 +119,8 @@ def traceable_descriptor(desc: Descriptor) -> bool:
     """True iff :func:`dispatch` can execute this descriptor under a jax
     trace (kernel pattern match, or the jittable engine plan) — the
     requirement for vmap/shard_map multi-cluster execution."""
-    return (_match_gemm(desc) is not None
+    return (desc.num_iters == 0
+            or _match_gemm(desc) is not None
             or _match_gemv(desc) is not None
             or (desc.opcode in _EW_OPS and _is_contiguous_1d(desc))
             or _matches_reduce(desc)
@@ -136,14 +140,18 @@ def dispatch_stream(descs, mem: jnp.ndarray) -> jnp.ndarray:
 
 
 def dispatch_graph(descs, mem: jnp.ndarray, n_clusters: int | None = None,
-                   mode: str = "auto") -> jnp.ndarray:
+                   mode: str = "auto", pipeline: bool = False) -> jnp.ndarray:
     """Execute a descriptor program as a multi-cluster stream graph.
 
     The program is dependency-analysed over AGU address ranges, partitioned
     into independent sub-streams, and scheduled across the cluster mesh
     (``repro.core.multistream``): shard_map over devices when >= 2 are
     present and the sub-streams are uniform, interleaved host execution
-    otherwise. Always semantically equal to ``dispatch_stream``.
+    otherwise. With ``pipeline=True`` dependent components do not collapse
+    to one serial queue: the program level-izes into stages with explicit
+    inter-cluster handoffs (``multistream.StageSchedule``). Always
+    semantically equal to ``dispatch_stream``.
     """
-    from .multistream import ClusterScheduler
-    return ClusterScheduler(descs, n_clusters=n_clusters).execute(mem, mode)
+    from .multistream import ClusterScheduler, StageSchedule
+    cls = StageSchedule if pipeline else ClusterScheduler
+    return cls(descs, n_clusters=n_clusters).execute(mem, mode)

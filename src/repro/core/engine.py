@@ -208,6 +208,8 @@ def execute_vectorized(desc: Descriptor, mem: np.ndarray) -> np.ndarray:
     if desc.store_level != desc.init_level:
         return execute(desc, mem)
     mem = np.array(mem, dtype=np.float32, copy=True)
+    if desc.num_iters == 0:     # zero-trip nest: no iterations, no stores
+        return mem
     n = len(desc.bounds)
     op = desc.opcode
     imm = np.float32(desc.imm)
@@ -278,6 +280,8 @@ def execute_jax(desc: Descriptor, mem: jnp.ndarray) -> jnp.ndarray:
     op = desc.opcode
     imm = jnp.float32(desc.imm)
     mem = jnp.asarray(mem, jnp.float32)
+    if desc.num_iters == 0:     # zero-trip nest: no iterations, no stores
+        return mem
 
     rd0 = mem[_agu_addresses(desc, desc.agu0, jnp)] if desc.reads_per_iter >= 1 else None
     rd1 = mem[_agu_addresses(desc, desc.agu1, jnp)] if desc.reads_per_iter >= 2 else None

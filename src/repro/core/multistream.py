@@ -1,11 +1,10 @@
 """Multi-cluster stream scheduling: the paper's scaled-out machine.
 
 The headline scaling claim (§III, Table II: 1 -> 8+ clusters) rests on many
-NTX clusters executing *independent* descriptor streams concurrently, each
-hiding DMA behind compute via double-buffered TCDM. The companion
-near-memory work (arXiv:1803.04783) scales the same loosely-coupled
-clusters across DRAM vaults precisely because streams with disjoint address
-ranges never synchronize.
+NTX clusters executing descriptor streams concurrently, each hiding DMA
+behind compute via double-buffered TCDM. The companion near-memory work
+(arXiv:1803.04783) scales the same loosely-coupled clusters across DRAM
+vaults, overlapping *dependent* stages through inter-cluster DMA.
 
 This module builds that layer on top of ``core.stream``:
 
@@ -13,29 +12,36 @@ This module builds that layer on top of ``core.stream``:
   ranges (``agu_span``/``spans_overlap``): descriptor j depends on an
   earlier descriptor i iff their accesses conflict (read-after-write,
   write-after-read or write-after-write). Read-read sharing — e.g. every
-  layer streaming the same weights — creates no edge. The DAG's connected
-  components are provably independent sub-streams: across components, no
-  write ever overlaps another component's reads or writes, so any
-  interleaving (including full concurrency) is bit-equivalent to program
-  order.
-* :class:`SubStream` — one component, rebased into a compact local memory
-  window with its own fused :class:`~repro.core.stream.CommandStream`
-  (intra-stream fusion still applies) and a double-buffered DMA/compute
-  roofline cost.
-* :class:`ClusterScheduler` — maps sub-streams onto an
-  :class:`~repro.core.cluster.NtxClusterSpec`-derived mesh with LPT
-  (longest-processing-time-first) load balancing, and executes them
-  concurrently: ``shard_map`` over a "cluster" mesh axis on >= 2 devices
-  (each device = one cluster with its own window, like the per-cluster DMA
-  engines), ``vmap``-stacked lanes on one device, or interleaved host
-  execution as the always-correct fallback.
+  layer streaming the same weights — creates no edge.
+* :class:`SubStream` — a group of descriptors in program order, rebased
+  into a compact local memory window with its own fused
+  :class:`~repro.core.stream.CommandStream` (intra-stream fusion still
+  applies) and a double-buffered DMA/compute roofline cost.
+* :class:`ClusterScheduler` — the *independent* case: the DAG's connected
+  components are provably order-free sub-streams, LPT-balanced onto an
+  :class:`~repro.core.cluster.NtxClusterSpec`-derived mesh and executed
+  concurrently (``shard_map`` over a "cluster" mesh axis, ``vmap``-stacked
+  lanes on one device, or interleaved host execution).
+* :class:`StageSchedule` — the *dependent* case: instead of collapsing a
+  connected program back to one serial queue, the RAW/WAR/WAW edges are
+  kept. Descriptors group into pipeline nodes by overlapping write
+  footprints (SCC-condensed so the node graph is a DAG), the DAG is
+  topologically level-ized into stages, each stage is LPT-balanced over
+  the mesh and executed concurrently, and every cross-stage edge is an
+  explicit *handoff*: the producer's write span lands in the consumer
+  cluster's rebased window through the shared L2 — the paper's
+  inter-cluster DMA. Stage barriers preserve program order for every
+  conflicting pair, so execution stays bit-equivalent to the serial
+  stream.
 
-``dispatch.dispatch_graph`` is the one-call entry point.
+``dispatch.dispatch_graph`` is the one-call entry point
+(``pipeline=True`` selects :class:`StageSchedule`).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -44,33 +50,15 @@ import jax.numpy as jnp
 
 from .cluster import NtxClusterSpec, PAPER_CLUSTER
 from .descriptor import Descriptor
-from .stream import CommandStream, agu_span, spans_overlap
+from .stream import (CommandStream, desc_spans, merge_spans, span_empty,
+                     spans_overlap)
 
 Span = Tuple[int, int]
 
+_ELEM_BYTES = 4
 
-# ----------------------------------------------------------------------
-# Span analysis
-# ----------------------------------------------------------------------
-def desc_spans(desc: Descriptor) -> Tuple[List[Span], Span]:
-    """(read spans, write span) — the conservative AGU footprints."""
-    reads: List[Span] = []
-    if desc.reads_per_iter >= 1:
-        reads.append(agu_span(desc.agu0, desc.bounds))
-    if desc.reads_per_iter >= 2:
-        reads.append(agu_span(desc.agu1, desc.bounds))
-    return reads, agu_span(desc.agu2, desc.bounds)
-
-
-def _merge_spans(spans: Sequence[Span]) -> List[Span]:
-    """Union of half-open intervals, sorted, overlaps/adjacency merged."""
-    out: List[Span] = []
-    for lo, hi in sorted(spans):
-        if out and lo <= out[-1][1]:
-            out[-1] = (out[-1][0], max(out[-1][1], hi))
-        else:
-            out.append((lo, hi))
-    return out
+# kept under the old private name for backward compatibility
+_merge_spans = merge_spans
 
 
 def _conflict(a_reads, a_write, b_reads, b_write) -> bool:
@@ -82,22 +70,34 @@ def _conflict(a_reads, a_write, b_reads, b_write) -> bool:
     return any(spans_overlap(b_write, r) for r in a_reads)
 
 
+def _intersect_bytes(a_spans: Sequence[Span], b_spans: Sequence[Span],
+                     elem_bytes: int = _ELEM_BYTES) -> int:
+    """Bytes in the intersection of two merged span lists."""
+    return elem_bytes * sum(
+        max(0, min(a_hi, b_hi) - max(a_lo, b_lo))
+        for a_lo, a_hi in a_spans for b_lo, b_hi in b_spans)
+
+
 # ----------------------------------------------------------------------
 # Sub-streams
 # ----------------------------------------------------------------------
 @dataclasses.dataclass
 class SubStream:
-    """One independent component of the program, in program order.
+    """One node of the schedule (component or pipeline stage node), in
+    program order.
 
     ``descs`` are the original descriptors; ``local`` the same descriptors
     rebased so the window [lo, hi) maps to local addresses [0, size).
+    ``read_ranges``/``write_ranges`` are the merged global footprints the
+    handoff planner sizes inter-cluster DMAs with.
     """
 
     indices: Tuple[int, ...]
     descs: List[Descriptor]
     lo: int
     hi: int
-    write_ranges: List[Span]            # global, merged; disjoint across subs
+    write_ranges: List[Span]            # global, merged
+    read_ranges: List[Span] = dataclasses.field(default_factory=list)
     local: List[Descriptor] = dataclasses.field(default_factory=list)
     stream: CommandStream = None
 
@@ -126,6 +126,57 @@ def _rebase(desc: Descriptor, lo: int) -> Descriptor:
     if desc.reads_per_iter >= 2:
         kw["agu1"] = shift(desc.agu1)
     return dataclasses.replace(desc, **kw)
+
+
+# ----------------------------------------------------------------------
+# Strongly-connected components (iterative Tarjan)
+# ----------------------------------------------------------------------
+def _tarjan_scc(n: int, succ: List[List[int]]) -> Tuple[List[int], int]:
+    """Component id per node. Cycles in the preliminary node graph (write
+    ping-pong across regions) must merge into one pipeline node."""
+    index: List[Optional[int]] = [None] * n
+    low = [0] * n
+    onstk = [False] * n
+    stk: List[int] = []
+    comp = [0] * n
+    counter = 0
+    ncomp = 0
+    for root in range(n):
+        if index[root] is not None:
+            continue
+        work = [(root, 0)]
+        while work:
+            v, pi = work[-1]
+            if pi == 0:
+                index[v] = low[v] = counter
+                counter += 1
+                stk.append(v)
+                onstk[v] = True
+            advanced = False
+            for i in range(pi, len(succ[v])):
+                w = succ[v][i]
+                if index[w] is None:
+                    work[-1] = (v, i + 1)
+                    work.append((w, 0))
+                    advanced = True
+                    break
+                if onstk[w]:
+                    low[v] = min(low[v], index[w])
+            if advanced:
+                continue
+            work.pop()
+            if low[v] == index[v]:
+                while True:
+                    w = stk.pop()
+                    onstk[w] = False
+                    comp[w] = ncomp
+                    if w == v:
+                        break
+                ncomp += 1
+            if work:
+                u = work[-1][0]
+                low[u] = min(low[u], low[v])
+    return comp, ncomp
 
 
 # ----------------------------------------------------------------------
@@ -161,38 +212,105 @@ class StreamGraph:
     def n_edges(self) -> int:
         return len(self.edges)
 
+    def _make_substream(self, idxs: Sequence[int]) -> SubStream:
+        descs = [self.descs[i] for i in idxs]
+        touched: List[Span] = []
+        writes: List[Span] = []
+        reads: List[Span] = []
+        for i in idxs:
+            r, w = self._spans[i]
+            reads.extend(r)
+            writes.append(w)
+            touched.extend(r)
+            touched.append(w)
+        touched = [s for s in touched if not span_empty(s)]
+        lo = min((s[0] for s in touched), default=0)
+        hi = max((s[1] for s in touched), default=0)
+        sub = SubStream(indices=tuple(idxs), descs=descs, lo=lo, hi=hi,
+                        write_ranges=merge_spans(writes),
+                        read_ranges=merge_spans(reads))
+        sub.local = [_rebase(d, lo) for d in descs]
+        sub.stream = CommandStream(sub.local)
+        return sub
+
     def partition(self) -> List[SubStream]:
-        """Independent sub-streams, deterministically ordered by the index
-        of their first descriptor; each keeps program order internally."""
+        """Fully independent sub-streams (connected components),
+        deterministically ordered by the index of their first descriptor;
+        each keeps program order internally."""
         comps: dict = {}
         for i, r in enumerate(self._roots):
             comps.setdefault(r, []).append(i)
-        subs: List[SubStream] = []
-        for idxs in sorted(comps.values(), key=lambda ix: ix[0]):
-            descs = [self.descs[i] for i in idxs]
-            touched: List[Span] = []
-            writes: List[Span] = []
+        return [self._make_substream(idxs)
+                for idxs in sorted(comps.values(), key=lambda ix: ix[0])]
+
+    def pipeline_partition(self) -> Tuple[List[SubStream],
+                                          List[Tuple[int, int]]]:
+        """Pipeline nodes + node-level dependency edges.
+
+        Descriptors whose *write* footprints overlap form one node (an
+        in-place chain, an accumulator region); descriptor conflicts lift
+        to node edges; cyclic node groups (region ping-pong) SCC-condense
+        into a single node so the result is a DAG. Nodes are ordered by
+        first descriptor index and keep program order internally; every
+        descriptor-level conflict is represented by a node edge or falls
+        inside one node."""
+        n = len(self.descs)
+        parent = list(range(n))
+
+        def find(i):
+            while parent[i] != i:
+                parent[i] = parent[parent[i]]
+                i = parent[i]
+            return i
+
+        # every write-write overlap is already a WAW conflict edge, so the
+        # grouping relation is a filter over self.edges, not a fresh
+        # all-pairs scan
+        for i, j in self.edges:
+            if spans_overlap(self._spans[i][1], self._spans[j][1]):
+                parent[find(i)] = find(j)
+        groups: dict = {}
+        for i in range(n):
+            groups.setdefault(find(i), []).append(i)
+        prelim = sorted(groups.values(), key=lambda ix: ix[0])
+        node_of = {}
+        for gi, idxs in enumerate(prelim):
             for i in idxs:
-                reads, write = self._spans[i]
-                touched.extend(reads)
-                touched.append(write)
-                writes.append(write)
-            lo = min(s[0] for s in touched)
-            hi = max(s[1] for s in touched)
-            sub = SubStream(indices=tuple(idxs), descs=descs, lo=lo, hi=hi,
-                            write_ranges=_merge_spans(writes))
-            sub.local = [_rebase(d, lo) for d in descs]
-            sub.stream = CommandStream(sub.local)
-            subs.append(sub)
-        return subs
+                node_of[i] = gi
+        succ: List[List[int]] = [[] for _ in prelim]
+        seen = set()
+        for i, j in self.edges:
+            u, v = node_of[i], node_of[j]
+            if u != v and (u, v) not in seen:
+                seen.add((u, v))
+                succ[u].append(v)
+        comp, _ = _tarjan_scc(len(prelim), succ)
+        merged: dict = {}
+        for gi, idxs in enumerate(prelim):
+            merged.setdefault(comp[gi], []).extend(idxs)
+        final = sorted((sorted(ix) for ix in merged.values()),
+                       key=lambda ix: ix[0])
+        node_id = {}
+        for fi, idxs in enumerate(final):
+            for i in idxs:
+                node_id[i] = fi
+        nodes = [self._make_substream(idxs) for idxs in final]
+        nedges = sorted({(node_id[i], node_id[j]) for i, j in self.edges
+                         if node_id[i] != node_id[j]})
+        return nodes, nedges
 
 
 # ----------------------------------------------------------------------
-# The scheduler
+# Load balancing
 # ----------------------------------------------------------------------
 def _lpt_assign(costs: Sequence[float], n_clusters: int) -> List[int]:
     """Longest-processing-time-first onto the least-loaded cluster.
-    Deterministic: ties broken by sub-stream index, then cluster index."""
+
+    Deterministic: ties broken by sub-stream index, then cluster index.
+    Always a valid partition: every sub-stream lands on a cluster in
+    [0, n_clusters), including when ``n_clusters`` exceeds the number of
+    sub-streams or costs are 0 (extra clusters simply stay empty)."""
+    n_clusters = max(1, int(n_clusters))
     order = sorted(range(len(costs)), key=lambda i: (-costs[i], i))
     load = [0.0] * n_clusters
     assign = [0] * len(costs)
@@ -203,6 +321,98 @@ def _lpt_assign(costs: Sequence[float], n_clusters: int) -> List[int]:
     return assign
 
 
+# ----------------------------------------------------------------------
+# Shared sub-stream executors
+# ----------------------------------------------------------------------
+def _substreams_uniform(subs: Sequence[SubStream]) -> bool:
+    """All sub-streams share one rebased program (and window size) — the
+    data-parallel-clusters case the paper scales: one kernel, per-cluster
+    data tiles. Only then can the lanes stack for vmap/shard_map."""
+    if not subs:
+        return False
+    first = subs[0]
+    return all(s.size == first.size and s.local == first.local
+               for s in subs[1:])
+
+
+def _substreams_traceable(subs: Sequence[SubStream]) -> bool:
+    from .dispatch import traceable_descriptor
+    return all(traceable_descriptor(d) for s in subs for d in s.local)
+
+
+def _run_interleaved(mem: jnp.ndarray,
+                     subs: Sequence[SubStream]) -> Tuple[jnp.ndarray, int]:
+    """Round-robin over sub-streams at fused-group granularity — the host
+    stands in for the per-cluster DMA engines, issuing one group per
+    cluster per turn. The sub-streams must be mutually independent, so any
+    interleaving is bit-identical to serial execution. Returns the updated
+    memory and the number of turns."""
+    windows = [mem[s.lo:s.hi] for s in subs]
+    stats = [s.stream._fresh_stats() for s in subs]
+    cursors = [0] * len(subs)
+    done = 0
+    while done < len(subs):
+        done = 0
+        for i, sub in enumerate(subs):
+            groups = sub.stream.groups
+            if cursors[i] >= len(groups):
+                done += 1
+                continue
+            windows[i] = groups[cursors[i]].run(windows[i], stats[i])
+            cursors[i] += 1
+    for sub, w in zip(subs, windows):
+        for glo, ghi in sub.write_ranges:
+            mem = mem.at[glo:ghi].set(w[glo - sub.lo:ghi - sub.lo])
+    return mem, max((len(s.stream.groups) for s in subs), default=0)
+
+
+def _stacked_run_fn(subs: Sequence[SubStream], sharded: bool,
+                    stats: Optional[dict] = None):
+    """One jitted computation over uniform, traceable sub-streams: gather
+    lanes, run the shared rebased program on every lane (vmap, optionally
+    sharded over the "cluster" mesh axis), scatter the write ranges back —
+    no per-stream dispatch round trips."""
+    groups = subs[0].stream.groups
+
+    def body(window):
+        st = subs[0].stream._fresh_stats()
+        for g in groups:
+            window = g.run(window, st)
+        return window
+
+    n_lanes = len(subs)
+    if sharded:
+        from jax.sharding import Mesh, PartitionSpec as P
+        from repro.distributed.compat import shard_map
+        n_dev = min(len(jax.devices()), n_lanes)
+        if stats is not None:
+            stats["n_devices_used"] = n_dev
+        mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("cluster",))
+        pad = (-n_lanes) % n_dev
+        inner = shard_map(lambda w: jax.vmap(body)(w), mesh=mesh,
+                          in_specs=(P("cluster"),),
+                          out_specs=P("cluster"))
+    else:
+        pad = 0
+        inner = jax.vmap(body)
+
+    def run(m):
+        lanes = jnp.stack([m[s.lo:s.hi] for s in subs])
+        if pad:
+            lanes = jnp.concatenate(
+                [lanes, jnp.zeros((pad, lanes.shape[1]), lanes.dtype)])
+        out = inner(lanes)
+        for i, sub in enumerate(subs):
+            for glo, ghi in sub.write_ranges:
+                m = m.at[glo:ghi].set(out[i, glo - sub.lo:ghi - sub.lo])
+        return m
+
+    return jax.jit(run)
+
+
+# ----------------------------------------------------------------------
+# The scheduler: independent components
+# ----------------------------------------------------------------------
 class ClusterScheduler:
     """Maps a program's independent sub-streams onto a cluster mesh.
 
@@ -248,7 +458,7 @@ class ClusterScheduler:
             "uniform": self.uniform(),
             "traceable": self.traceable(),
             "cluster_times_s": self.cluster_times(),
-            "critical_path_s": max(self.cluster_times()),
+            "critical_path_s": max(self.cluster_times(), default=0.0),
             "serial_time_s": sum(self.costs),
             "mode_used": None,
         }
@@ -261,24 +471,14 @@ class ClusterScheduler:
         return t
 
     def model_speedup(self) -> float:
-        crit = max(self.cluster_times()) if self.costs else 0.0
+        crit = max(self.cluster_times(), default=0.0) if self.costs else 0.0
         return sum(self.costs) / crit if crit > 0 else 1.0
 
     def uniform(self) -> bool:
-        """All sub-streams share one rebased program (and window size) — the
-        data-parallel-clusters case the paper scales: one kernel, per-cluster
-        data tiles. Only then can the lanes stack for vmap/shard_map."""
-        subs = self.substreams
-        if not subs:
-            return False
-        first = subs[0]
-        return all(s.size == first.size and s.local == first.local
-                   for s in subs[1:])
+        return _substreams_uniform(self.substreams)
 
     def traceable(self) -> bool:
-        from .dispatch import traceable_descriptor
-        return all(traceable_descriptor(d)
-                   for s in self.substreams for d in s.local)
+        return _substreams_traceable(self.substreams)
 
     def plan_mode(self, mode: str = "auto") -> str:
         if mode != "auto":
@@ -297,85 +497,176 @@ class ClusterScheduler:
         if mode == "serial":
             return CommandStream(self.graph.descs).execute(mem)
         if mode == "interleave":
-            return self._execute_interleaved(mem)
+            mem, turns = _run_interleaved(mem, self.substreams)
+            self.stats["interleave_turns"] = turns
+            return mem
         if mode in ("vmap", "shard_map"):
             if not (self.uniform() and self.traceable()):
                 raise ValueError(
                     f"mode {mode!r} needs uniform, traceable sub-streams "
                     "(use mode='interleave' or 'auto')")
-            return self._execute_stacked(mem, sharded=(mode == "shard_map"))
+            key = "shard" if mode == "shard_map" else "vmap"
+            if key not in self._jitted:
+                self._jitted[key] = _stacked_run_fn(
+                    self.substreams, sharded=(mode == "shard_map"),
+                    stats=self.stats)
+            return self._jitted[key](mem)
         raise ValueError(f"unknown mode {mode!r}")
 
-    def _execute_interleaved(self, mem: jnp.ndarray) -> jnp.ndarray:
-        """Round-robin over sub-streams at fused-group granularity — the
-        host stands in for the per-cluster DMA engines, issuing one group
-        per cluster per turn. Order across sub-streams is irrelevant by
-        construction, so this is bit-identical to serial execution."""
-        windows = [mem[s.lo:s.hi] for s in self.substreams]
-        stats = [s.stream._fresh_stats() for s in self.substreams]
-        cursors = [0] * len(self.substreams)
-        done = 0
-        while done < len(self.substreams):
-            done = 0
-            for i, sub in enumerate(self.substreams):
-                groups = sub.stream.groups
-                if cursors[i] >= len(groups):
-                    done += 1
-                    continue
-                windows[i] = groups[cursors[i]].run(windows[i], stats[i])
-                cursors[i] += 1
-        for sub, w in zip(self.substreams, windows):
-            for glo, ghi in sub.write_ranges:
-                mem = mem.at[glo:ghi].set(w[glo - sub.lo:ghi - sub.lo])
-        self.stats["interleave_turns"] = max(
-            (len(s.stream.groups) for s in self.substreams), default=0)
-        return mem
 
-    def _stacked_body(self):
-        groups = self.substreams[0].stream.groups
+# ----------------------------------------------------------------------
+# The pipeline: dependent stages with inter-cluster handoffs
+# ----------------------------------------------------------------------
+class StageSchedule:
+    """Stage-level pipeline schedule for DEPENDENT descriptor programs.
 
-        def body(window):
-            st = self.substreams[0].stream._fresh_stats()
-            for g in groups:
-                window = g.run(window, st)
-            return window
-        return body
+    ``pipeline_partition`` keeps the dependency edges instead of
+    collapsing connected components to one queue: nodes level-ize
+    topologically into stages; nodes inside one stage are mutually
+    conflict-free (any conflict forces different levels) and execute
+    concurrently with the same transports as :class:`ClusterScheduler`;
+    stage barriers plus write-back through the shared memory realise every
+    cross-stage handoff (the paper's inter-cluster DMA through L2), so
+    every execution mode stays bit-equivalent to the serial stream.
 
-    def _execute_stacked(self, mem: jnp.ndarray, sharded: bool) -> jnp.ndarray:
-        """One jitted computation: gather lanes, run the shared program on
-        every lane (vmap, optionally sharded over the cluster mesh axis),
-        scatter the write ranges back — no per-stream dispatch round trips."""
-        subs = self.substreams
-        key = "shard" if sharded else "vmap"
-        if key not in self._jitted:
-            body = self._stacked_body()
-            n_lanes = len(subs)
-            if sharded:
-                from jax.sharding import Mesh, PartitionSpec as P
-                from repro.distributed.compat import shard_map
-                n_dev = min(len(jax.devices()), n_lanes)
-                self.stats["n_devices_used"] = n_dev
-                mesh = Mesh(np.asarray(jax.devices()[:n_dev]), ("cluster",))
-                pad = (-n_lanes) % n_dev
-                inner = shard_map(lambda w: jax.vmap(body)(w), mesh=mesh,
-                                  in_specs=(P("cluster"),),
-                                  out_specs=P("cluster"))
+    ``execute(mem, mode=...)`` takes a per-stage transport *preference*:
+    ``"vmap"``/``"shard_map"`` stack a stage's lanes when that stage is
+    uniform + traceable and falls back to interleaved host execution
+    otherwise; ``"interleave"`` always interleaves; ``"serial"`` is the
+    one-queue oracle; ``"auto"`` picks shard_map on >= 2 devices.
+    """
+
+    def __init__(self, descs_or_graph, n_clusters: Optional[int] = None,
+                 spec: NtxClusterSpec = PAPER_CLUSTER,
+                 setup_cycles: int = 100):
+        self.graph = (descs_or_graph if isinstance(descs_or_graph, StreamGraph)
+                      else StreamGraph(descs_or_graph))
+        self.spec = spec
+        self.setup_cycles = setup_cycles
+        self.nodes, self.node_edges = self.graph.pipeline_partition()
+        if n_clusters is None:
+            n_clusters = max(1, len(jax.devices()))
+        self.n_clusters = max(1, int(n_clusters))
+
+        n = len(self.nodes)
+        succs: List[List[int]] = [[] for _ in range(n)]
+        indeg = [0] * n
+        for u, v in self.node_edges:
+            succs[u].append(v)
+            indeg[v] += 1
+        self.level = [0] * n
+        q = deque(i for i in range(n) if indeg[i] == 0)
+        seen = 0
+        while q:
+            u = q.popleft()
+            seen += 1
+            for v in succs[u]:
+                self.level[v] = max(self.level[v], self.level[u] + 1)
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    q.append(v)
+        assert seen == n, "pipeline_partition must produce a DAG"
+        n_stages = (max(self.level) + 1) if n else 0
+        self.stages: List[List[int]] = [[] for _ in range(n_stages)]
+        for i in range(n):
+            self.stages[self.level[i]].append(i)
+
+        self.costs = [nd.roofline_time(spec, setup_cycles)
+                      for nd in self.nodes]
+        self.assignment = [0] * n
+        for stage in self.stages:
+            a = _lpt_assign([self.costs[i] for i in stage], self.n_clusters)
+            for i, c in zip(stage, a):
+                self.assignment[i] = c
+
+        # Handoffs: one per cross-node dependency edge. The producer's
+        # write spans restricted to the consumer's read footprint are the
+        # bytes the inter-cluster DMA moves; a consumer scheduled on the
+        # producer's own cluster reads its TCDM for free.
+        self.handoffs: List[Dict] = []
+        for u, v in self.node_edges:
+            nbytes = _intersect_bytes(self.nodes[u].write_ranges,
+                                      self.nodes[v].read_ranges)
+            self.handoffs.append({
+                "src": u, "dst": v, "bytes": nbytes,
+                "cross_cluster": self.assignment[u] != self.assignment[v],
+                "stage": self.level[v]})
+
+        self._jitted = {}
+        self.stats = {
+            "n_descriptors": len(self.graph.descs),
+            "n_nodes": n,
+            "n_edges": len(self.node_edges),
+            "n_stages": n_stages,
+            "n_clusters": self.n_clusters,
+            "levels": list(self.level),
+            "assignment": list(self.assignment),
+            "stage_sizes": [len(s) for s in self.stages],
+            "handoff_bytes": sum(h["bytes"] for h in self.handoffs),
+            "handoff_bytes_cross": sum(h["bytes"] for h in self.handoffs
+                                       if h["cross_cluster"]),
+            "serial_time_s": sum(self.costs),
+            "pipeline_time_s": self.model_time(),
+            "stage_times_s": self.stage_times(),
+            "mode_used": None,
+        }
+
+    # -- analysis ------------------------------------------------------
+    def stage_times(self) -> List[float]:
+        """Per-stage critical path: the most-loaded cluster of each stage."""
+        out = []
+        for stage in self.stages:
+            load = [0.0] * self.n_clusters
+            for i in stage:
+                load[self.assignment[i]] += self.costs[i]
+            out.append(max(load))
+        return out
+
+    def handoff_time(self) -> float:
+        """DMA time of the cross-cluster handoffs at the practical rate."""
+        nbytes = sum(h["bytes"] for h in self.handoffs if h["cross_cluster"])
+        return nbytes / self.spec.practical_bw
+
+    def model_time(self) -> float:
+        """Pipelined time: sum of stage critical paths + handoff DMA."""
+        return sum(self.stage_times()) + self.handoff_time()
+
+    def model_speedup(self) -> float:
+        t = self.model_time()
+        return sum(self.costs) / t if t > 0 else 1.0
+
+    def plan_stage_mode(self, stage: Sequence[int], mode: str = "auto") -> str:
+        if mode == "interleave":
+            return "interleave"
+        subs = [self.nodes[i] for i in stage]
+        if (len(subs) >= 2 and _substreams_uniform(subs)
+                and _substreams_traceable(subs)):
+            if mode in ("vmap", "shard_map"):
+                return mode
+            return ("shard_map" if len(jax.devices()) >= 2 else "vmap")
+        return "interleave"
+
+    # -- execution -----------------------------------------------------
+    def execute(self, mem, mode: str = "auto") -> jnp.ndarray:
+        mem = jnp.asarray(mem, jnp.float32)
+        if mode == "serial":
+            self.stats["mode_used"] = "serial"
+            return CommandStream(self.graph.descs).execute(mem)
+        if mode not in ("auto", "vmap", "shard_map", "interleave"):
+            raise ValueError(f"unknown mode {mode!r}")
+        stage_modes = []
+        for si, stage in enumerate(self.stages):
+            m = self.plan_stage_mode(stage, mode)
+            stage_modes.append(m)
+            subs = [self.nodes[i] for i in stage]
+            if m == "interleave":
+                mem, _ = _run_interleaved(mem, subs)
             else:
-                pad = 0
-                inner = jax.vmap(body)
-
-            def run(m):
-                lanes = jnp.stack([m[s.lo:s.hi] for s in subs])
-                if pad:
-                    lanes = jnp.concatenate(
-                        [lanes,
-                         jnp.zeros((pad, lanes.shape[1]), lanes.dtype)])
-                out = inner(lanes)
-                for i, sub in enumerate(subs):
-                    for glo, ghi in sub.write_ranges:
-                        m = m.at[glo:ghi].set(
-                            out[i, glo - sub.lo:ghi - sub.lo])
-                return m
-
-            self._jitted[key] = jax.jit(run)
-        return self._jitted[key](mem)
+                key = (si, m)
+                if key not in self._jitted:
+                    self._jitted[key] = _stacked_run_fn(
+                        subs, sharded=(m == "shard_map"), stats=self.stats)
+                mem = self._jitted[key](mem)
+        self.stats["mode_used"] = mode
+        self.stats["stage_modes"] = stage_modes
+        return mem

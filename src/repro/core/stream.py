@@ -62,9 +62,20 @@ _REDUCE_TAILS = {Opcode.VSUM: "sum", Opcode.MAX: "max", Opcode.MIN: "min"}
 # ----------------------------------------------------------------------
 def agu_span(agu: Agu, bounds: Sequence[int]) -> Tuple[int, int]:
     """Half-open [lo, hi) range of addresses the AGU can touch over the
-    nest — the conservative footprint used for dependency analysis."""
+    nest — the conservative footprint used for dependency analysis.
+
+    A zero-trip nest (any bound <= 0) touches NO addresses and returns the
+    empty span (base, base); naively folding ``stride * (b - 1)`` would add
+    ``-stride`` and could shrink ``lo`` below base (or overstate ``hi``),
+    manufacturing phantom overlaps and false dependency edges. Zero-stride
+    levels re-read one address and never widen the span.
+    """
+    if any(b <= 0 for b in bounds):
+        return agu.base, agu.base
     lo = hi = agu.base
     for b, s in zip(bounds, agu.strides):
+        if s == 0 or b == 1:
+            continue
         d = s * (b - 1)
         if d < 0:
             lo += d
@@ -73,12 +84,56 @@ def agu_span(agu: Agu, bounds: Sequence[int]) -> Tuple[int, int]:
     return lo, hi + 1
 
 
+def span_empty(a: Tuple[int, int]) -> bool:
+    """True for a span touching no addresses (zero-trip nests)."""
+    return a[0] >= a[1]
+
+
 def spans_overlap(a: Tuple[int, int], b: Tuple[int, int]) -> bool:
+    """Half-open interval intersection; empty spans overlap nothing."""
+    if span_empty(a) or span_empty(b):
+        return False
     return a[0] < b[1] and b[0] < a[1]
 
 
 def write_span(desc: Descriptor) -> Tuple[int, int]:
     return agu_span(desc.agu2, desc.bounds)
+
+
+def desc_spans(desc: Descriptor) -> Tuple[List[Tuple[int, int]],
+                                          Tuple[int, int]]:
+    """(read spans, write span) — the conservative AGU footprints."""
+    reads: List[Tuple[int, int]] = []
+    if desc.reads_per_iter >= 1:
+        reads.append(agu_span(desc.agu0, desc.bounds))
+    if desc.reads_per_iter >= 2:
+        reads.append(agu_span(desc.agu1, desc.bounds))
+    return reads, agu_span(desc.agu2, desc.bounds)
+
+
+def merge_spans(spans: Sequence[Tuple[int, int]]) -> List[Tuple[int, int]]:
+    """Union of half-open intervals: sorted, empties dropped,
+    overlaps/adjacency merged."""
+    out: List[Tuple[int, int]] = []
+    for lo, hi in sorted(s for s in spans if not span_empty(s)):
+        if out and lo <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], hi))
+        else:
+            out.append((lo, hi))
+    return out
+
+
+def program_spans(descs: Sequence[Descriptor]) -> Tuple[
+        List[Tuple[int, int]], List[Tuple[int, int]]]:
+    """(merged read spans, merged write spans) of a descriptor program —
+    what the multi-cluster scheduler sizes handoff DMAs with."""
+    reads: List[Tuple[int, int]] = []
+    writes: List[Tuple[int, int]] = []
+    for d in descs:
+        r, w = desc_spans(d)
+        reads.extend(r)
+        writes.append(w)
+    return merge_spans(reads), merge_spans(writes)
 
 
 def dispatch_bytes(desc: Descriptor, elem_bytes: int = _ELEM_BYTES) -> int:
@@ -101,6 +156,7 @@ def _is_stream_ew(desc: Descriptor) -> bool:
     """Contiguous 1-loop streaming command (init = store = level 0)."""
     return (desc.opcode in _EW_OPS
             and len(desc.bounds) == 1
+            and desc.bounds[0] >= 1
             and desc.init_level == 0 and desc.store_level == 0
             and desc.agu2.strides[0] == 1
             and (desc.reads_per_iter < 1 or desc.agu0.strides[0] == 1)
@@ -308,6 +364,8 @@ def _plan_chain(descs: List[Descriptor], i: int):
 
 def _plan_gemm(descs: List[Descriptor], i: int) -> Optional[FusedGemm]:
     """GEMM + fused-epilogue run starting at descs[i]."""
+    if descs[i].num_iters == 0:
+        return None      # zero-trip MAC is a no-op; fusing would write C
     gm = _match_gemm(descs[i])
     if gm is None:
         return None
@@ -396,6 +454,14 @@ class CommandStream:
                 "gathers": 0, "operand_gathers": 0, "scatters": 0}
 
     # -- analysis ------------------------------------------------------
+    def read_spans(self) -> List[Tuple[int, int]]:
+        """Merged read footprint of the whole stream (handoff sizing)."""
+        return program_spans(self.descs)[0]
+
+    def write_spans(self) -> List[Tuple[int, int]]:
+        """Merged write footprint of the whole stream (handoff sizing)."""
+        return program_spans(self.descs)[1]
+
     def bytes_moved(self) -> int:
         """Planned bytes with fusion (vs. ``bytes_sequential``)."""
         return sum(g.bytes_moved() for g in self.groups)

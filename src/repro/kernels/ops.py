@@ -87,8 +87,12 @@ def _align_up(x: int, mult: int) -> int:
     return max(mult, -(-x // mult) * mult)
 
 
+def _autotune_mode() -> str:
+    return os.environ.get("NTX_AUTOTUNE", "model")
+
+
 def _autotune_measure() -> bool:
-    return os.environ.get("NTX_AUTOTUNE", "model") == "measure"
+    return _autotune_mode() == "measure"
 
 
 def _candidate_blocks(m: int, n: int, k: int, base) -> list:
@@ -140,8 +144,14 @@ def matmul_blocks(m: int, n: int, k: int,
     per shape — the autotune cache. Wrappers pad operands up to the block
     multiples, so alignment never exceeds the old padding behaviour.
     With ``NTX_AUTOTUNE=measure`` and a Pallas backend active, the first
-    sight of a shape races candidate triples and caches the winner."""
-    key = (m, n, k, dtype_bytes)
+    sight of a shape races candidate triples and caches the winner.
+
+    The memo key includes the active backend and ``NTX_AUTOTUNE`` mode in
+    addition to the shape and ``dtype_bytes``: a cache warmed under
+    ``ref``/``model`` must NOT be served verbatim after switching to
+    ``measure``/Pallas (that would silently skip measured racing), and a
+    measured pick is only valid for the backend it was raced on."""
+    key = (m, n, k, dtype_bytes, _BACKEND, _autotune_mode())
     hit = _BLOCK_CACHE.get(key)
     if hit is not None:
         _BLOCK_CACHE_STATS["hits"] += 1
@@ -159,6 +169,16 @@ def matmul_blocks(m: int, n: int, k: int,
 
 def block_cache_stats() -> dict:
     return dict(_BLOCK_CACHE_STATS)
+
+
+def clear_autotune_cache() -> None:
+    """Drop every memoized block pick and reset the hit/miss counters.
+
+    Call after changing the execution environment in ways the memo key
+    cannot see (e.g. moving the process to different hardware)."""
+    _BLOCK_CACHE.clear()
+    for k in _BLOCK_CACHE_STATS:
+        _BLOCK_CACHE_STATS[k] = 0
 
 
 def _norm_epilogue(epilogue):

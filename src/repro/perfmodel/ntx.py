@@ -106,6 +106,13 @@ def figure5_suite(spec=PAPER_CLUSTER) -> Dict[str, KernelPoint]:
     return out
 
 
+def _ratio(num: float, den: float) -> float:
+    """Guarded gain ratio: an empty program or a zero-cost denominator
+    (e.g. a single zero-trip descriptor) is neither a speedup nor a
+    slowdown — the ratio is defined as 1.0, never inf/nan."""
+    return num / den if den > 0 else 1.0
+
+
 # ----------------------------------------------------------------------
 # Command-stream fusion pricing (§II-E offload model)
 # ----------------------------------------------------------------------
@@ -134,7 +141,7 @@ def stream_fusion_gain(descs, spec: NtxClusterSpec = PAPER_CLUSTER,
             "bytes_fused": float(bytes_fused),
             "time_sequential_s": t_seq,
             "time_fused_s": t_fused,
-            "speedup": t_seq / t_fused,
+            "speedup": _ratio(t_seq, t_fused),
             "n_groups": float(len(cs.groups)),
             "n_fused_groups": float(sum(1 for g in cs.groups if g.fused))}
 
@@ -168,12 +175,51 @@ def multistream_gain(descs, n_clusters: int = 4,
             "n_clusters": float(sched.n_clusters),
             "time_serial_s": t_serial,
             "time_parallel_s": t_par,
-            "speedup": t_serial / t_par if t_par > 0 else 1.0,
+            "speedup": _ratio(t_serial, t_par),
             "load_balance": (min(t for t in cluster_t if t > 0) / t_par
                              if t_par > 0 and any(cluster_t) else 1.0),
-            "dma_overlap_gain": (t_no_overlap / t_serial
-                                 if t_serial > 0 else 1.0),
+            "dma_overlap_gain": _ratio(t_no_overlap, t_serial),
             "cluster_times_s": cluster_t}
+
+
+# ----------------------------------------------------------------------
+# Stage-pipelined dependent streams (inter-cluster handoffs)
+# ----------------------------------------------------------------------
+def pipeline_gain(descs, n_clusters: int = 4,
+                  spec: NtxClusterSpec = PAPER_CLUSTER,
+                  setup_cycles: int = 100) -> Dict[str, float]:
+    """Price a DEPENDENT descriptor program executed as a stage pipeline
+    (``core.multistream.StageSchedule``) vs. one serial stream.
+
+    The program's pipeline nodes level-ize into stages; each stage runs its
+    nodes concurrently (LPT over the mesh), so the pipelined time is the
+    sum of per-stage critical paths plus the inter-cluster handoff DMA —
+    each cross-cluster dependency edge moves the producer's write span
+    into the consumer cluster's window through the shared L2 at the
+    derated practical bandwidth. Consumers co-located with their producer
+    hand off through the cluster's own TCDM for free.
+
+    All ratios are guarded: an empty program or zero critical path prices
+    as 1.0 (no inf/nan).
+    """
+    from repro.core.multistream import StageSchedule
+    ss = StageSchedule(descs, n_clusters=n_clusters, spec=spec,
+                       setup_cycles=setup_cycles)
+    t_serial = sum(ss.costs)
+    stage_t = ss.stage_times()
+    t_handoff = ss.handoff_time()
+    t_pipe = ss.model_time()
+    return {"n_nodes": float(len(ss.nodes)),
+            "n_edges": float(len(ss.node_edges)),
+            "n_stages": float(len(ss.stages)),
+            "n_clusters": float(ss.n_clusters),
+            "time_serial_s": t_serial,
+            "time_pipeline_s": t_pipe,
+            "time_handoff_s": t_handoff,
+            "handoff_bytes": float(ss.stats["handoff_bytes"]),
+            "handoff_bytes_cross": float(ss.stats["handoff_bytes_cross"]),
+            "speedup": _ratio(t_serial, t_pipe),
+            "stage_times_s": stage_t}
 
 
 # ----------------------------------------------------------------------

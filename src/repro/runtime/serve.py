@@ -34,9 +34,11 @@ class ServeConfig:
     temperature: float = 0.0
     seed: int = 0
     multistream: bool = True        # greedy argmax via the cluster scheduler
+    pipeline: bool = True           # prefill sampling via the stage pipeline
 
 
 _ARGMAX_SCHEDULERS: Dict[tuple, Any] = {}
+_PREFILL_SCHEDULERS: Dict[tuple, Any] = {}
 
 
 def greedy_argmax_multistream(logits) -> np.ndarray:
@@ -67,13 +69,55 @@ def greedy_argmax_multistream(logits) -> np.ndarray:
     return np.asarray(slots, np.float32).astype(np.int64)
 
 
+def greedy_argmax_pipelined(logits) -> np.ndarray:
+    """Prefill sampling as a stage-pipelined descriptor program.
+
+    The LM head writes each request's logits row in its own (producer)
+    cluster; the sampler consumes it in another. Per request the program is
+    a dependent two-command chain over a ``[row | staged row | slot]``
+    layout: COPY streams the row into the sampler cluster's window (the
+    inter-cluster DMA handoff), then ARGMAX reduces the staged row to the
+    token slot. ``StageSchedule`` level-izes the chains into a head stage
+    and a sampler stage (both uniform across requests, so they stack as
+    vmap/shard_map lanes) and is cached per batch shape. Bit-equal to
+    ``np.argmax`` (ties resolve to the first maximum).
+    """
+    from repro.core import Agu, Descriptor, Opcode
+    from repro.core import argmax as argmax_desc
+    from repro.core.multistream import StageSchedule
+    logits = jnp.asarray(logits, jnp.float32)
+    b, vocab = logits.shape
+    w = 2 * vocab + 1                      # [row | staged | slot] per request
+    sched = _PREFILL_SCHEDULERS.get((b, vocab))
+    if sched is None:
+        descs = []
+        for i in range(b):
+            row, staged, slot = i * w, i * w + vocab, i * w + 2 * vocab
+            descs.append(Descriptor(bounds=(vocab,), opcode=Opcode.COPY,
+                                    agu0=Agu(row, (1,)),
+                                    agu2=Agu(staged, (1,))))
+            descs.append(argmax_desc(vocab, staged, slot))
+        sched = StageSchedule(descs)
+        _PREFILL_SCHEDULERS[(b, vocab)] = sched
+    mem = jnp.concatenate(
+        [logits, jnp.zeros((b, vocab + 1), jnp.float32)], axis=1).reshape(-1)
+    out = sched.execute(mem)
+    slots = out.reshape(b, w)[:, 2 * vocab]
+    return np.asarray(slots, np.float32).astype(np.int64)
+
+
 class Server:
     def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig):
         self.cfg, self.params, self.scfg = cfg, params, scfg
         self.model = Model(cfg)
         self._decode = jax.jit(self.model.decode)
 
-    def _sample(self, logits: jnp.ndarray, rng) -> np.ndarray:
+    def _sample(self, logits: jnp.ndarray, rng,
+                prefill: bool = False) -> np.ndarray:
+        if self.scfg.temperature <= 0 and prefill and self.scfg.pipeline:
+            # prefill: the logits row is handed off head-cluster ->
+            # sampler-cluster through the stage pipeline
+            return greedy_argmax_pipelined(logits)
         if self.scfg.temperature <= 0 and self.scfg.multistream:
             return greedy_argmax_multistream(logits)
         logits = np.asarray(logits, np.float32)
@@ -105,7 +149,7 @@ class Server:
 
         out = [[] for _ in range(b)]
         done = np.zeros(b, bool)
-        cur = self._sample(logits, rng)
+        cur = self._sample(logits, rng, prefill=True)
         fill = jnp.int32(fill)
         t1 = time.perf_counter()
         steps = 0

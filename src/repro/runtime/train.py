@@ -133,38 +133,59 @@ def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig,
                                   NamedSharding(mesh, P()), None))
 
 
-def plan_update_multistream(params, n_clusters: Optional[int] = None
-                            ) -> Dict[str, Any]:
+def plan_update_multistream(params, n_clusters: Optional[int] = None,
+                            pipeline: bool = True) -> Dict[str, Any]:
     """Schedule the optimizer update as a multi-cluster descriptor program.
 
-    Each parameter tensor's AXPY-class update (grad stream in, param stream
-    in/out) is one descriptor over its own address range, so every tensor
-    is an independent sub-stream; the cluster scheduler load-balances them
-    over the mesh (layer-per-cluster, the paper's DNN-training split) and
-    prices the critical path vs. serial execution.
+    Each parameter tensor's update is a dependent two-command chain over
+    its own address range: the grad stream is preconditioned elementwise
+    into a scratch window (MUL with the per-element preconditioner — the
+    1/sqrt(v) term of an adaptive optimizer), then folded into the params
+    (AXPY) — a RAW dependency through the scratch buffer. Tensors stay
+    independent of each other, so the cluster scheduler load-balances the
+    per-tensor chains over the mesh (layer-per-cluster, the paper's
+    DNN-training split) and prices the critical path vs. serial execution.
+
+    With ``pipeline=True`` the plan additionally level-izes the dependent
+    chains into a stage pipeline (precondition stage -> apply stage) with
+    explicit producer->consumer handoffs (``StageSchedule``) and reports
+    the projected pipelined speedup under ``"pipeline"``.
     """
     from repro.core import Agu, Descriptor, Opcode
-    from repro.core.multistream import ClusterScheduler
+    from repro.core.multistream import ClusterScheduler, StageSchedule
     leaves = jax.tree_util.tree_leaves(params)
     descs = []
     off = 0
     for leaf in leaves:
         n = int(np.prod(leaf.shape)) if leaf.shape else 1
-        # [grad_i | param_i] regions, laid out tensor after tensor
-        descs.append(Descriptor(
+        # [grad_i | precond_i | scratch_i | param_i], tensor after tensor
+        g, p, s, w = off, off + n, off + 2 * n, off + 3 * n
+        descs.append(Descriptor(                       # scratch = grad * precond
+            bounds=(n,), opcode=Opcode.MUL,
+            agu0=Agu(g, (1,)), agu1=Agu(p, (1,)), agu2=Agu(s, (1,))))
+        descs.append(Descriptor(                       # param += -lr * scratch
             bounds=(n,), opcode=Opcode.AXPY, imm=-1.0,
-            agu0=Agu(off, (1,)), agu1=Agu(off + n, (1,)),
-            agu2=Agu(off + n, (1,))))
-        off += 2 * n
+            agu0=Agu(s, (1,)), agu1=Agu(w, (1,)), agu2=Agu(w, (1,))))
+        off += 4 * n
     if n_clusters is None:
         n_clusters = max(1, len(jax.devices()))
     sched = ClusterScheduler(descs, n_clusters=n_clusters)
-    return {"n_substreams": len(sched.substreams),
+    plan = {"n_substreams": len(sched.substreams),
             "n_clusters": sched.n_clusters,
             "assignment": list(sched.assignment),
-            "critical_path_s": max(sched.cluster_times()),
+            "critical_path_s": max(sched.cluster_times(), default=0.0),
             "serial_time_s": sum(sched.costs),
             "model_speedup": sched.model_speedup()}
+    if pipeline:
+        ss = StageSchedule(sched.graph, n_clusters=n_clusters)
+        plan["pipeline"] = {
+            "n_nodes": len(ss.nodes),
+            "n_stages": len(ss.stages),
+            "handoff_bytes": ss.stats["handoff_bytes"],
+            "handoff_bytes_cross": ss.stats["handoff_bytes_cross"],
+            "pipeline_time_s": ss.model_time(),
+            "model_speedup": ss.model_speedup()}
+    return plan
 
 
 class Trainer:
