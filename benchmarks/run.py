@@ -13,6 +13,8 @@ trajectory files can be diffed across PRs. Sections:
   fusion      fused command-stream execution vs per-descriptor dispatch
   multistream multi-cluster stream-graph scheduling vs serial dispatch
   pipeline    stage-pipelined dependent sub-streams vs serial dispatch
+  api         Program/Executor front-door overhead vs raw dispatch, and
+              auto-policy bit-equality with every forced policy
   roofline    TPU roofline table from the dry-run artifacts (if present)
 
 ``--quick`` shrinks workload sizes/reps for a CI smoke run (same sections,
@@ -136,6 +138,17 @@ def bench_kernels():
         emit("kernels.gemm_128_pallas_interpret", us, 1)
 
 
+def _chain_program(n: int, data):
+    """The 3-op chain workload as an ntx Program (no hand offsets)."""
+    from repro.core import Program
+    prog = Program()
+    x = prog.buffer((n,), name="x", init=data)
+    t = prog.thresh(x, 0.2)
+    prog.relu(t, out=t)
+    prog.thresh(t, 0.5, out=t)
+    return prog, x, t
+
+
 def bench_fusion():
     """Fused command-stream execution vs. per-descriptor dispatch.
 
@@ -145,22 +158,16 @@ def bench_fusion():
     """
     import jax
     import jax.numpy as jnp
-    from repro.core import Agu, CommandStream, Descriptor, Opcode
+    from repro.core import CommandStream
     from repro.core.dispatch import dispatch
     from repro.kernels import ops, ref
     rng = np.random.default_rng(0)
 
     # --- 3-op elementwise chain over a 1M-element stream -------------
     n = 1 << (12 if _QUICK else 20)
-    mem = jnp.asarray(rng.standard_normal(2 * n).astype(np.float32))
-    chain = [
-        Descriptor(bounds=(n,), opcode=Opcode.THRESH, imm=0.2,
-                   agu0=Agu(0, (1,)), agu2=Agu(n, (1,))),
-        Descriptor(bounds=(n,), opcode=Opcode.RELU,
-                   agu0=Agu(n, (1,)), agu2=Agu(n, (1,))),
-        Descriptor(bounds=(n,), opcode=Opcode.THRESH, imm=0.5,
-                   agu0=Agu(n, (1,)), agu2=Agu(n, (1,))),
-    ]
+    prog, _, _ = _chain_program(n, rng.standard_normal(n).astype(np.float32))
+    chain = list(prog.descriptors)
+    mem = prog.pack()
     cs = CommandStream(chain)
 
     def run_fused(m):
@@ -219,27 +226,22 @@ def bench_multistream():
     """
     import jax
     import jax.numpy as jnp
-    from repro.core import Agu, CommandStream, Descriptor, Opcode
+    from repro.core import CommandStream, Program
     from repro.core.multistream import ClusterScheduler
     from repro.perfmodel.ntx import multistream_gain
     rng = np.random.default_rng(0)
 
     n = 1 << (12 if _QUICK else 18)
     n_streams = 4
-    mem = jnp.asarray(
-        rng.standard_normal(2 * n * n_streams).astype(np.float32))
-    descs = []
+    prog = Program()
     for i in range(n_streams):
-        x, t = 2 * n * i, 2 * n * i + n
-        descs += [
-            Descriptor(bounds=(n,), opcode=Opcode.THRESH, imm=0.2,
-                       agu0=Agu(x, (1,)), agu2=Agu(t, (1,))),
-            Descriptor(bounds=(n,), opcode=Opcode.RELU,
-                       agu0=Agu(t, (1,)), agu2=Agu(t, (1,))),
-            Descriptor(bounds=(n,), opcode=Opcode.AXPY, imm=1.5,
-                       agu0=Agu(t, (1,)), agu1=Agu(x, (1,)),
-                       agu2=Agu(t, (1,))),
-        ]
+        x = prog.buffer((n,), name=f"x{i}",
+                        init=rng.standard_normal(n).astype(np.float32))
+        t = prog.thresh(x, 0.2)
+        prog.relu(t, out=t)
+        prog.axpy(1.5, t, x, out=t)
+    descs = list(prog.descriptors)
+    mem = prog.pack()
 
     serial = CommandStream(descs)
     n_dev = len(jax.devices())
@@ -286,34 +288,26 @@ def bench_pipeline():
     """
     import jax
     import jax.numpy as jnp
-    from repro.core import Agu, CommandStream, Descriptor, Opcode
+    from repro.core import CommandStream, Program
     from repro.core.multistream import StageSchedule
     from repro.perfmodel.ntx import pipeline_gain
     rng = np.random.default_rng(0)
 
     n = 1 << (12 if _QUICK else 18)
     n_lanes = 4
-    lane = 4 * n
-    mem = jnp.asarray(
-        rng.standard_normal(lane * n_lanes).astype(np.float32))
-    descs = []
+    prog = Program()
     for i in range(n_lanes):
-        x, t, u = lane * i, lane * i + n, lane * i + 2 * n
-        descs += [
-            # producer: 3-op chain x -> t
-            Descriptor(bounds=(n,), opcode=Opcode.THRESH, imm=0.2,
-                       agu0=Agu(x, (1,)), agu2=Agu(t, (1,))),
-            Descriptor(bounds=(n,), opcode=Opcode.RELU,
-                       agu0=Agu(t, (1,)), agu2=Agu(t, (1,))),
-            Descriptor(bounds=(n,), opcode=Opcode.AXPY, imm=1.5,
-                       agu0=Agu(t, (1,)), agu1=Agu(x, (1,)),
-                       agu2=Agu(t, (1,))),
-            # consumer: 2-op chain t -> u (RAW handoff on t)
-            Descriptor(bounds=(n,), opcode=Opcode.THRESH, imm=0.1,
-                       agu0=Agu(t, (1,)), agu2=Agu(u, (1,))),
-            Descriptor(bounds=(n,), opcode=Opcode.RELU,
-                       agu0=Agu(u, (1,)), agu2=Agu(u, (1,))),
-        ]
+        x = prog.buffer((n,), name=f"x{i}",
+                        init=rng.standard_normal(n).astype(np.float32))
+        # producer: 3-op chain x -> t
+        t = prog.thresh(x, 0.2)
+        prog.relu(t, out=t)
+        prog.axpy(1.5, t, x, out=t)
+        # consumer: 2-op chain t -> u (RAW handoff on t)
+        u = prog.thresh(t, 0.1)
+        prog.relu(u, out=u)
+    descs = list(prog.descriptors)
+    mem = prog.pack()
 
     serial = CommandStream(descs)
     sched = StageSchedule(descs, n_clusters=max(len(jax.devices()), 2))
@@ -344,6 +338,90 @@ def bench_pipeline():
          f"{g['handoff_bytes_cross']:.0f}")
 
 
+def bench_api():
+    """The Program/Executor front door vs. raw descriptor dispatch.
+
+    Measures what the abstraction costs: Program build time, the pack +
+    execute round trip through ``Executor.run`` against the same fused
+    stream driven by hand (hand-staged memory image + CommandStream), and
+    asserts (at full bench sizes; --quick sizes are too small to amortise
+    a fixed per-call overhead) that the front door stays within 5%. Also
+    asserts the auto policy is bit-equal to every forced policy on this
+    workload — the acceptance property of the policy-driven API.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import CommandStream, ExecutionPolicy, Executor
+    rng = np.random.default_rng(0)
+
+    n = 1 << (12 if _QUICK else 18)
+    n_streams = 4
+    datas = [rng.standard_normal(n).astype(np.float32)
+             for _ in range(n_streams)]
+
+    def build():
+        from repro.core import Program
+        prog = Program()
+        handles = []
+        for i in range(n_streams):
+            x = prog.buffer((n,), name=f"x{i}")
+            t = prog.thresh(x, 0.2)
+            prog.relu(t, out=t)
+            prog.axpy(1.5, t, x, out=t)
+            handles.append((x, t))
+        return prog, handles
+
+    us_build = _t(lambda: build()[0], reps=10)
+    emit("api.program_build", us_build, 3 * n_streams)   # descriptors built
+
+    prog, handles = build()
+    inputs = {x: jnp.asarray(d) for (x, _), d in zip(handles, datas)}
+    us_pack = _t(lambda: prog.pack(inputs), reps=5)
+    emit("api.pack", us_pack, 4 * prog.size)             # bytes staged
+
+    # raw baseline: hand-staged flat memory + fused CommandStream; the
+    # API path does the same work through handles (pack + run + unpack)
+    cs = CommandStream(prog.descriptors)
+    zeros = jnp.zeros(n, jnp.float32)
+
+    def run_raw():
+        segs = []
+        for d in datas:
+            segs.append(jnp.asarray(d))
+            segs.append(zeros)
+        return cs.execute(jnp.concatenate(segs))
+
+    ex = Executor(ExecutionPolicy(policy="fused"))
+
+    def run_api():
+        return ex.run(prog, inputs=inputs).mem
+
+    # interleaved min-of-trials: host timing at these sizes is noisy and
+    # the overhead claim needs the floor of each side, not one mean
+    raws, apis = [], []
+    for _ in range(2 if _QUICK else 4):
+        raws.append(_t(run_raw, reps=3))
+        apis.append(_t(run_api, reps=3))
+    us_raw, us_api = min(raws), min(apis)
+    overhead = us_api / max(us_raw, 1e-9) - 1.0
+    emit("api.raw_dispatch", us_raw, cs.bytes_moved())
+    emit("api.executor_run", us_api, cs.bytes_moved())
+    emit("api.overhead_frac", 0, f"{overhead:.4f}")
+    if not _QUICK:
+        assert overhead < 0.05, f"front-door overhead {overhead:.1%} >= 5%"
+
+    # auto policy: resolved choice + bit-equality with every forced policy
+    auto = Executor()
+    got = np.asarray(auto.run(prog, inputs=inputs).mem)
+    emit("api.auto_policy", 0, auto.stats["policy"])
+    for pol in ("serial", "fused", "multistream", "pipeline"):
+        forced = np.asarray(Executor(ExecutionPolicy(policy=pol))
+                            .run(prog, inputs=inputs).mem)
+        match = bool((got == forced).all())
+        emit(f"api.auto_matches_{pol}", 0, int(match))
+        assert match, f"auto policy not bit-equal to forced {pol!r}"
+
+
 def bench_roofline():
     import os
     d = "results/dryrun"
@@ -371,6 +449,7 @@ SECTIONS = {
     "fusion": bench_fusion,
     "multistream": bench_multistream,
     "pipeline": bench_pipeline,
+    "api": bench_api,
     "roofline": bench_roofline,
 }
 

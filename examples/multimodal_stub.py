@@ -1,6 +1,7 @@
 """Frontend-stub example: whisper (audio) and qwen2-vl (vision) backbones
 driven with precomputed frame/patch embeddings, per the assignment's
-modality-stub contract.
+modality-stub contract. Greedy next-token picks run as ``ntx.Program``
+ARGMAX descriptor programs through the policy-driven ``ntx.Executor``.
 
 Run: PYTHONPATH=src python examples/multimodal_stub.py
 """
@@ -9,10 +10,23 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+import ntx
 from repro import configs
 from repro.models import Model
 
 rng = np.random.default_rng(0)
+
+
+def greedy_pick(logits: jnp.ndarray) -> jnp.ndarray:
+    """argmax over each request's logits row as an NTX descriptor program
+    (one ARGMAX sub-stream per request — the serving sampler's shape)."""
+    b, vocab = logits.shape
+    with ntx.Program() as p:
+        rows = [p.buffer((vocab,), name=f"row{i}") for i in range(b)]
+        slots = [p.argmax(r, name=f"slot{i}") for i, r in enumerate(rows)]
+    res = ntx.Executor().run(p, inputs=dict(zip(rows, logits)))
+    picks = np.asarray([res[s][0] for s in slots], np.int32)
+    return jnp.asarray(picks[:, None], jnp.int32)
 
 # ---------------------------------------------------------------- whisper
 cfg = configs.get_reduced("whisper-medium")
@@ -28,7 +42,7 @@ batch = {
 }
 loss, _ = jax.jit(model.loss)(params, batch)
 logits, cache, fill = model.prefill(params, batch, cache_len=s + 8)
-tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+tok = greedy_pick(logits)
 logits2, _ = model.decode(params, tok, cache, jnp.int32(fill))
 print(f"whisper-medium (reduced): teacher-forced loss {float(loss):.3f}, "
       f"decode logits {logits2.shape} ok")
@@ -51,7 +65,7 @@ batch = {
 }
 loss, _ = jax.jit(model.loss)(params, batch)
 logits, cache, fill = model.prefill(params, batch, cache_len=s + 8)
-tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+tok = greedy_pick(logits)
 logits2, _ = model.decode(params, tok, cache, jnp.int32(fill))
 print(f"qwen2-vl-2b (reduced): text-masked loss {float(loss):.3f}, "
       f"decode logits {logits2.shape} ok")

@@ -1,9 +1,12 @@
-"""Quickstart: the NTX descriptor engine + kernels in five minutes.
+"""Quickstart: the NTX front door + descriptor engine in five minutes.
 
 Shows the paper's core abstraction end-to-end:
-  1. program a GEMV as one NTX descriptor (5 HWLs + 3 AGUs) and execute it
-     on the functional engine,
-  2. the same descriptor's delta-step encoding (what the silicon loads),
+  1. build a descriptor program through the ``ntx.Program`` builder
+     (symbolic buffers — the allocator owns every base address) and run it
+     through the policy-driven ``ntx.Executor``,
+  2. what the builder recorded: the raw descriptor (5 HWLs + 3 AGUs) and
+     its delta-step encoding (what the silicon loads), executed on the
+     functional engine oracle,
   3. the TPU-native kernels (Pallas, interpret mode here) for the paper's
      kernel suite,
   4. the wide-accumulator precision claim.
@@ -14,33 +17,45 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.core import (Agu, Descriptor, Opcode, engine, gemv,
-                        strides_to_hw_steps)
+import ntx
+from repro.core import engine, strides_to_hw_steps
 from repro.core.precision import conv_layer_rmse_study
 from repro.kernels import ops, ref
 
 rng = np.random.default_rng(0)
 
 # ----------------------------------------------------------------- 1.
-print("== 1. GEMV as one NTX command ==")
+print("== 1. GEMV through the ntx.Program / ntx.Executor front door ==")
 m, n = 8, 16
-mem = np.zeros(1024, np.float32)
 A = rng.standard_normal((m, n)).astype(np.float32)
 x = rng.standard_normal(n).astype(np.float32)
-mem[:m * n] = A.ravel()
-mem[512:512 + n] = x
-desc = gemv(m, n, a_base=0, x_base=512, y_base=768)
+
+with ntx.Program() as p:
+    A_h = p.buffer((m, n), name="A", init=A)
+    x_h = p.buffer((n,), name="x", init=x)
+    y_h = p.gemv(A_h, x_h)                 # y = A @ x as ONE NTX command
+    top = p.argmax(y_h, name="top")        # ARGMAX reduction tail
+
+executor = ntx.Executor()                  # policy="auto" by default
+res = executor.run(p)
+print(f"program: {p!r}")
+print(f"executor picked policy {executor.stats['policy']!r}")
+print("y matches numpy :", np.allclose(res[y_h], A @ x, atol=1e-5))
+print("argmax matches  :", int(res[top][0]) == int(np.argmax(A @ x)))
+
+# ----------------------------------------------------------------- 2.
+print("\n== 2. what the builder recorded: one NTX command ==")
+desc = p.descriptors[0]
 print(f"descriptor: bounds={desc.bounds} opcode={desc.opcode.value} "
       f"init/store level={desc.init_level}")
 print(f"flops={desc.flops()} bytes={desc.bytes_moved()} "
       f"intensity={desc.operational_intensity():.3f} flop/B")
-out = engine.execute(desc, mem)
-print("matches numpy:", np.allclose(out[768:768 + m], A @ x, atol=1e-5))
-
-# ----------------------------------------------------------------- 2.
-print("\n== 2. hardware delta-step encoding (AGU0) ==")
 steps = strides_to_hw_steps(desc.agu0.strides[:2], desc.bounds)
-print(f"affine strides {desc.agu0.strides[:2]} -> per-level steps {steps}")
+print(f"AGU0 affine strides {desc.agu0.strides[:2]} -> per-level hardware "
+      f"steps {steps}")
+out = engine.execute(desc, np.asarray(p.pack()))   # cycle-by-cycle oracle
+print("engine oracle matches:",
+      np.allclose(p.unpack(out)[y_h], A @ x, atol=1e-5))
 
 # ----------------------------------------------------------------- 3.
 print("\n== 3. TPU kernels (Pallas, interpret mode) ==")

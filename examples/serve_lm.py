@@ -44,6 +44,15 @@ def main():
     for i, c in enumerate(out["completions"]):
         print(f"  req{i}: {c[:12]}{'...' if len(c) > 12 else ''}")
 
+    # greedy sampling ran as ntx.Program descriptor programs through the
+    # policy-driven Executor — one ARGMAX sub-stream per request
+    from repro.runtime.serve import sampler_stats
+    for shape, st in sampler_stats().items():
+        sched = st.get("scheduler") or {}
+        print(f"  sampler {shape}: policy={st['policy']} "
+              f"descs={st['n_descriptors']} "
+              f"mode={sched.get('mode_used')}")
+
 
 if __name__ == "__main__":
     main()

@@ -2,7 +2,9 @@
 with the analytical roofline beside measured CPU wall-clock.
 
 Reproduces the structure of Figure 5: memory-bound kernels pin the
-bandwidth roof, GEMM/conv pin the compute roof.
+bandwidth roof, GEMM/conv pin the compute roof. The closing section
+drives the same stencil as a descriptor program through the
+``ntx.Program`` / ``ntx.Executor`` front door.
 
 Run: PYTHONPATH=src python examples/stencil_hpc.py
 """
@@ -13,6 +15,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+import ntx as ntx_api
 from repro.kernels import ops, ref
 from repro.perfmodel import ntx
 
@@ -85,3 +88,19 @@ print(f"{'DIFF (13pt)':14s} {p.gflops:8.2f} Gflop/s (mem)   "
 print("\nNTX model column reproduces the paper's Fig. 5 operating points;")
 print("the practical peak is 17.4 Gflop/s (87% of 20; banking stalls) and")
 print("the practical bandwidth roof is 4.35 GB/s.")
+
+# The same 1-D Laplace as an offloaded descriptor program: symbolic
+# buffers, one MAC loop nest per row of coefficients, policy-driven
+# execution — no hand-computed base addresses anywhere.
+n = 4094
+src = rng.standard_normal(n + 2).astype(np.float32)
+with ntx_api.Program() as p:
+    x_h = p.buffer((n + 2,), name="x", init=src)
+    c_h = p.buffer((3,), name="coef", init=np.asarray([1.0, -2.0, 1.0]))
+    out_h = p.laplace1d(x_h, c_h)
+ex = ntx_api.Executor()
+res = ex.run(p)
+want = src[:-2] - 2 * src[1:-1] + src[2:]
+print(f"\nLAP1D as an NTX descriptor program (policy "
+      f"{ex.stats['policy']!r}): matches stencil oracle:",
+      np.allclose(res[out_h], want, atol=1e-4))

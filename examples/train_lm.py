@@ -58,6 +58,13 @@ def main():
     print(f"loss: {ls[0]:.3f} -> {ls[-1]:.3f} over {len(ls)} steps "
           f"(stragglers={result['straggler_events']}, "
           f"resumed_from={result['resumed_from']})")
+    ms = result.get("multistream")
+    if ms:
+        # the optimizer update planned as an ntx.Program across the mesh
+        print(f"update plan: {ms['n_substreams']} per-tensor streams on "
+              f"{ms['n_clusters']} clusters, model speedup "
+              f"{ms['model_speedup']:.2f}x (pipelined "
+              f"{ms['pipeline']['model_speedup']:.2f}x)")
     assert ls[-1] < ls[0], "loss must decrease"
 
 

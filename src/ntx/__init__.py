@@ -1,0 +1,22 @@
+"""The NTX front door: ``import ntx`` and use two objects.
+
+    import ntx
+
+    with ntx.Program() as p:
+        x = p.buffer((1024,), name="x")
+        y = p.buffer((1024,), name="y")
+        out = p.axpy(2.5, x, y)
+    res = ntx.Executor().run(p, inputs={x: xs, y: ys})
+    res[out]                       # named result, no base addresses
+
+This package is a thin alias over ``repro.core`` — the recording builder
+(:class:`Program`), the policy-driven executor (:class:`Executor`,
+:class:`ExecutionPolicy`) and the descriptor ISA underneath, re-exported
+under the name the paper gives the machine. See docs/api.md.
+"""
+from repro.core.descriptor import Agu, Descriptor, Opcode
+from repro.core.executor import ExecutionPolicy, Executor
+from repro.core.program import BufferHandle, Program, ProgramResult
+
+__all__ = ["Agu", "Descriptor", "Opcode", "ExecutionPolicy", "Executor",
+           "BufferHandle", "Program", "ProgramResult"]

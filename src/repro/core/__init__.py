@@ -19,6 +19,8 @@ from .dispatch import dispatch, dispatch_graph, dispatch_stream
 from .stream import CommandStream, plan_stream, program_spans
 from .multistream import (ClusterScheduler, StageSchedule, StreamGraph,
                           SubStream)
+from .program import BufferHandle, Program, ProgramResult
+from .executor import ExecutionPolicy, Executor
 
 __all__ = [
     "Agu", "Descriptor", "Opcode", "axpy", "gemv", "gemm", "memcpy",
@@ -31,4 +33,6 @@ __all__ = [
     "pick_matmul_blocks", "precision", "dispatch", "dispatch_stream",
     "dispatch_graph", "CommandStream", "plan_stream", "program_spans",
     "ClusterScheduler", "StageSchedule", "StreamGraph", "SubStream",
+    "BufferHandle", "Program", "ProgramResult", "ExecutionPolicy",
+    "Executor",
 ]

@@ -11,6 +11,7 @@ tests/test_dispatch.py.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 import jax
@@ -128,30 +129,36 @@ def traceable_descriptor(desc: Descriptor) -> bool:
 
 
 def dispatch_stream(descs, mem: jnp.ndarray) -> jnp.ndarray:
-    """Execute an ordered descriptor stream with command fusion.
+    """Deprecated shim: execute a descriptor stream with command fusion.
 
-    Compatible runs (elementwise chains, GEMM + epilogue commands) execute
-    as single fused kernels — operands stay resident between commands like
-    the paper's TCDM (§II-E) — with per-descriptor :func:`dispatch` as the
-    fallback when fusion is illegal. See ``repro.core.stream``.
+    Equivalent to (and implemented as) ``Executor().run_descriptors(descs,
+    mem, policy="fused")`` — build a :class:`~repro.core.program.Program`
+    and call :meth:`~repro.core.executor.Executor.run` instead.
     """
-    from .stream import CommandStream
-    return CommandStream(descs).execute(mem)
+    warnings.warn(
+        "dispatch_stream is deprecated; use repro.core.Executor "
+        "(Executor().run(program) or run_descriptors(..., policy='fused'))",
+        DeprecationWarning, stacklevel=2)
+    from .executor import Executor
+    return Executor().run_descriptors(descs, mem, policy="fused")
 
 
 def dispatch_graph(descs, mem: jnp.ndarray, n_clusters: int | None = None,
                    mode: str = "auto", pipeline: bool = False) -> jnp.ndarray:
-    """Execute a descriptor program as a multi-cluster stream graph.
+    """Deprecated shim: execute a program as a multi-cluster stream graph.
 
-    The program is dependency-analysed over AGU address ranges, partitioned
-    into independent sub-streams, and scheduled across the cluster mesh
-    (``repro.core.multistream``): shard_map over devices when >= 2 are
-    present and the sub-streams are uniform, interleaved host execution
-    otherwise. With ``pipeline=True`` dependent components do not collapse
-    to one serial queue: the program level-izes into stages with explicit
-    inter-cluster handoffs (``multistream.StageSchedule``). Always
-    semantically equal to ``dispatch_stream``.
+    Equivalent to (and implemented as) ``Executor(n_clusters=...,
+    transport=mode).run_descriptors(descs, mem, policy="pipeline" if
+    pipeline else "multistream")`` — build a
+    :class:`~repro.core.program.Program` and call
+    :meth:`~repro.core.executor.Executor.run` instead. Always semantically
+    equal to ``dispatch_stream``.
     """
-    from .multistream import ClusterScheduler, StageSchedule
-    cls = StageSchedule if pipeline else ClusterScheduler
-    return cls(descs, n_clusters=n_clusters).execute(mem, mode)
+    warnings.warn(
+        "dispatch_graph is deprecated; use repro.core.Executor "
+        "(ExecutionPolicy(policy='multistream'|'pipeline', n_clusters=..., "
+        "transport=...))",
+        DeprecationWarning, stacklevel=2)
+    from .executor import Executor
+    return Executor(n_clusters=n_clusters, transport=mode).run_descriptors(
+        descs, mem, policy="pipeline" if pipeline else "multistream")

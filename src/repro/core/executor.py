@@ -1,0 +1,250 @@
+"""``Executor`` — the unified, policy-driven front door for NTX programs.
+
+One call replaces the three divergent entry points (``dispatch``,
+``dispatch_stream``, ``dispatch_graph``): an :class:`Executor` holds an
+:class:`ExecutionPolicy` (backend, cluster count, transport, autotune mode
+— the knob that replaces the ``NTX_AUTOTUNE`` env var) and ``run``s a
+:class:`~repro.core.program.Program` under one of four execution policies:
+
+==============  =====================================================
+``serial``      per-descriptor :func:`~repro.core.dispatch.dispatch`
+``fused``       one fused :class:`~repro.core.stream.CommandStream`
+``multistream`` independent sub-streams over the cluster mesh
+                (:class:`~repro.core.multistream.ClusterScheduler`)
+``pipeline``    dependent stages with inter-cluster handoffs
+                (:class:`~repro.core.multistream.StageSchedule`)
+==============  =====================================================
+
+``policy="auto"`` (the default) consults the paper-derived gain ratios in
+``repro.perfmodel.ntx`` — ``stream_fusion_gain`` for fused-vs-serial,
+``multistream_gain``/``pipeline_gain`` for the mesh layers (both priced on
+top of fused sub-streams, so their speedups compose multiplicatively with
+the fusion gain) — and picks the highest-scoring policy, preferring the
+simpler one on ties. An explicit ``executor.run(program,
+policy="pipeline")`` overrides per call. Every policy is semantically
+equal (bit-equal for streaming/reduction programs); the choice is purely
+a performance decision, which is why a model can make it.
+
+Plans (fusion groups, schedules, jitted stacked transports) are cached on
+the program object keyed by its mutation version, so steady-state loops —
+a serving decode step, for instance — pay one dispatch per call.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .cluster import NtxClusterSpec, PAPER_CLUSTER
+from .descriptor import Descriptor
+from .program import Program, ProgramResult
+
+POLICIES = ("auto", "serial", "fused", "multistream", "pipeline")
+TRANSPORTS = ("auto", "vmap", "shard_map", "interleave", "serial")
+#: auto-selection moves past a simpler policy only on a real win
+_EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    """How an :class:`Executor` runs programs.
+
+    ``policy``     auto | serial | fused | multistream | pipeline.
+    ``backend``    kernel backend for the run (ref | pallas_interpret |
+                   pallas); ``None`` keeps the process-wide setting.
+    ``n_clusters`` cluster-mesh width for the graph policies; ``None``
+                   means one cluster per visible device.
+    ``transport``  how scheduled sub-streams execute (auto | vmap |
+                   shard_map | interleave | serial — the scheduler modes).
+    ``autotune``   GEMM block autotune mode (model | measure) for the run;
+                   ``None`` keeps the process setting (which itself falls
+                   back to the deprecated ``NTX_AUTOTUNE`` env var).
+    """
+
+    policy: str = "auto"
+    backend: Optional[str] = None
+    n_clusters: Optional[int] = None
+    transport: str = "auto"
+    autotune: Optional[str] = None
+    spec: NtxClusterSpec = PAPER_CLUSTER
+    setup_cycles: int = 100
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, "
+                             f"got {self.policy!r}")
+        if self.transport not in TRANSPORTS:
+            raise ValueError(f"transport must be one of {TRANSPORTS}, "
+                             f"got {self.transport!r}")
+        if self.autotune not in (None, "model", "measure"):
+            raise ValueError(f"autotune must be model|measure|None, "
+                             f"got {self.autotune!r}")
+
+
+class Executor:
+    """Policy-driven execution of NTX descriptor programs.
+
+    ``Executor()`` runs with the default auto policy;
+    ``Executor(ExecutionPolicy(...))`` or keyword overrides
+    (``Executor(policy="pipeline", n_clusters=8)``) pin it down.
+    ``stats`` after a run records the resolved policy, the gain ratios the
+    auto decision consulted, and the underlying scheduler's stats.
+    """
+
+    def __init__(self, policy: "ExecutionPolicy | str | None" = None,
+                 **overrides):
+        if isinstance(policy, str):        # Executor(policy="pipeline")
+            overrides = {"policy": policy, **overrides}
+            policy = None
+        if policy is None:
+            policy = ExecutionPolicy(**overrides)
+        elif overrides:
+            policy = dataclasses.replace(policy, **overrides)
+        self.policy = policy
+        self.stats: Dict = {}
+
+    # -- policy selection ----------------------------------------------
+    def _n_clusters(self) -> int:
+        if self.policy.n_clusters is not None:
+            return max(1, int(self.policy.n_clusters))
+        return max(1, len(jax.devices()))
+
+    def select_policy(self, descs: Sequence[Descriptor]) -> tuple:
+        """(chosen policy, gain dicts) for a descriptor program.
+
+        Scores vs. one-command-at-a-time serial dispatch: ``fused`` scores
+        the fusion speedup; the mesh policies price their scheduling gain
+        on top of fused sub-streams, so their score is the product. The
+        earliest (simplest) policy wins ties — an empty or indivisible
+        program degrades gracefully to ``serial``/``fused``.
+        """
+        from repro.perfmodel import ntx as perfmodel
+        gains = perfmodel.policy_gains(descs, n_clusters=self._n_clusters(),
+                                       spec=self.policy.spec,
+                                       setup_cycles=self.policy.setup_cycles)
+        fusion = gains["fusion"]["speedup"]
+        scores = {"serial": 1.0,
+                  "fused": fusion,
+                  "multistream": fusion * gains["multistream"]["speedup"],
+                  "pipeline": fusion * gains["pipeline"]["speedup"]}
+        best = "serial"
+        for cand in ("fused", "multistream", "pipeline"):
+            if scores[cand] > scores[best] * (1.0 + _EPS):
+                best = cand
+        return best, {"scores": scores, **gains}
+
+    def plan(self, program_or_descs) -> Dict:
+        """Resolve the policy for a program without executing it."""
+        descs = (program_or_descs.descriptors
+                 if isinstance(program_or_descs, Program)
+                 else list(program_or_descs))
+        if self.policy.policy == "auto":
+            chosen, gains = self.select_policy(descs)
+        else:
+            chosen, gains = self.policy.policy, None
+        return {"policy": chosen, "n_clusters": self._n_clusters(),
+                "transport": self.policy.transport, "gains": gains}
+
+    # -- execution -----------------------------------------------------
+    @contextlib.contextmanager
+    def _env(self):
+        """Apply the policy's backend/autotune for the duration of a run."""
+        from repro.kernels import ops
+        with contextlib.ExitStack() as stack:
+            if (self.policy.backend is not None
+                    and self.policy.backend != ops.get_backend()):
+                stack.enter_context(ops.backend(self.policy.backend))
+            if self.policy.autotune is not None:
+                stack.enter_context(ops.autotune_mode(self.policy.autotune))
+            yield
+
+    def _build_runner(self, descs: Sequence[Descriptor], chosen: str):
+        """The callable (mem -> mem) plus its stats source for one policy."""
+        from .dispatch import dispatch
+        from .multistream import ClusterScheduler, StageSchedule
+        from .stream import CommandStream
+        if chosen == "serial":
+            def run(mem):
+                for d in descs:
+                    mem = dispatch(d, mem)
+                return mem
+            return run, None
+        if chosen == "fused":
+            cs = CommandStream(descs)
+            return cs.execute, cs
+        cls = StageSchedule if chosen == "pipeline" else ClusterScheduler
+        sched = cls(descs, n_clusters=self._n_clusters(),
+                    spec=self.policy.spec,
+                    setup_cycles=self.policy.setup_cycles)
+        transport = self.policy.transport
+        return (lambda mem: sched.execute(mem, transport)), sched
+
+    def _resolve(self, descs: Sequence[Descriptor],
+                 policy: Optional[str]) -> tuple:
+        chosen = policy or self.policy.policy
+        if chosen not in POLICIES:
+            raise ValueError(f"policy must be one of {POLICIES}, "
+                             f"got {chosen!r}")
+        gains = None
+        if chosen == "auto":
+            chosen, gains = self.select_policy(descs)
+        return chosen, gains
+
+    def run_descriptors(self, descs: Sequence[Descriptor], mem,
+                        policy: Optional[str] = None) -> jnp.ndarray:
+        """Execute a raw descriptor list over a flat memory image.
+
+        The compatibility layer under the deprecated ``dispatch_stream`` /
+        ``dispatch_graph`` shims — new code should build a
+        :class:`Program` and call :meth:`run`."""
+        descs = list(descs)
+        chosen, gains = self._resolve(descs, policy)
+        runner, source = self._build_runner(descs, chosen)
+        with self._env():
+            out = runner(jnp.asarray(mem, jnp.float32))
+        self.stats = {"policy": chosen, "gains": gains,
+                      "n_descriptors": len(descs),
+                      "scheduler": getattr(source, "stats", None)}
+        return out
+
+    def run(self, program: Program, inputs=None,
+            policy: Optional[str] = None) -> ProgramResult:
+        """Pack, execute and unpack one program.
+
+        ``inputs`` binds arrays to buffer handles/names (see
+        :meth:`Program.pack`); ``policy`` overrides the executor's policy
+        for this call (e.g. ``policy="pipeline"``). Returns a
+        :class:`ProgramResult` — index it with the program's handles.
+        """
+        descs = program.descriptors
+        cache = getattr(program, "_plan_cache", None)
+        if cache is None:
+            cache = {}
+            program._plan_cache = cache
+        # cache the resolved policy AND its runner per program version, so
+        # a steady-state loop neither re-prices nor re-plans the program.
+        # backend/autotune are part of the key: a jitted transport bakes
+        # the kernel backend in at trace time, and measured autotune picks
+        # are only valid for the mode they were raced under
+        key = (program.version, policy or self.policy.policy,
+               self._n_clusters(), self.policy.transport,
+               self.policy.backend, self.policy.autotune, self.policy.spec,
+               self.policy.setup_cycles)
+        hit = cache.get(key)
+        if hit is None:
+            # plans for superseded program versions can never be reused
+            for stale in [k for k in cache if k[0] != program.version]:
+                del cache[stale]
+            chosen, gains = self._resolve(descs, policy)
+            hit = (chosen, gains) + self._build_runner(descs, chosen)
+            cache[key] = hit
+        chosen, gains, runner, source = hit
+        with self._env():
+            mem = runner(program.pack(inputs))
+        self.stats = {"policy": chosen, "gains": gains,
+                      "n_descriptors": len(descs),
+                      "scheduler": getattr(source, "stats", None)}
+        return program.unpack(mem)

@@ -26,9 +26,11 @@ This module builds that layer on top of ``core.stream``:
   connected program back to one serial queue, the RAW/WAR/WAW edges are
   kept. Descriptors group into pipeline nodes by overlapping write
   footprints (SCC-condensed so the node graph is a DAG), the DAG is
-  topologically level-ized into stages, each stage is LPT-balanced over
-  the mesh and executed concurrently, and every cross-stage edge is an
-  explicit *handoff*: the producer's write span lands in the consumer
+  topologically level-ized into stages, each stage is handoff-aware
+  LPT-balanced over the mesh (a consumer is biased toward its producer's
+  cluster unless load imbalance outweighs the saved DMA) and executed
+  concurrently, and every cross-stage edge is an explicit *handoff*: the
+  producer's write span lands in the consumer
   cluster's rebased window through the shared L2 — the paper's
   inter-cluster DMA. Stage barriers preserve program order for every
   conflicting pair, so execution stays bit-equivalent to the serial
@@ -573,22 +575,41 @@ class StageSchedule:
 
         self.costs = [nd.roofline_time(spec, setup_cycles)
                       for nd in self.nodes]
+        # Per-edge handoff sizing first: the producer's write spans
+        # restricted to the consumer's read footprint are the bytes the
+        # inter-cluster DMA moves. The stage LPT below needs them.
+        self._edge_bytes = {
+            (u, v): _intersect_bytes(self.nodes[u].write_ranges,
+                                     self.nodes[v].read_ranges)
+            for u, v in self.node_edges}
+        in_edges: Dict[int, List[Tuple[int, int]]] = {}
+        for (u, v), nbytes in self._edge_bytes.items():
+            in_edges.setdefault(v, []).append((u, nbytes))
+
+        # Handoff-aware stage LPT: nodes go longest-first onto the cluster
+        # minimising (stage load + the DMA a non-co-located placement
+        # would pay). Producers live in strictly earlier stages, so their
+        # clusters are already fixed when a consumer is placed; a consumer
+        # landing on its producer's cluster hands off through the
+        # cluster's own TCDM for free.
+        bw = spec.practical_bw
         self.assignment = [0] * n
         for stage in self.stages:
-            a = _lpt_assign([self.costs[i] for i in stage], self.n_clusters)
-            for i, c in zip(stage, a):
+            load = [0.0] * self.n_clusters
+            for i in sorted(stage, key=lambda j: (-self.costs[j], j)):
+                def placed_cost(k: int) -> float:
+                    dma = sum(nb / bw for u, nb in in_edges.get(i, ())
+                              if self.assignment[u] != k)
+                    return load[k] + dma
+                c = min(range(self.n_clusters),
+                        key=lambda k: (placed_cost(k), load[k], k))
                 self.assignment[i] = c
+                load[c] += self.costs[i]
 
-        # Handoffs: one per cross-node dependency edge. The producer's
-        # write spans restricted to the consumer's read footprint are the
-        # bytes the inter-cluster DMA moves; a consumer scheduled on the
-        # producer's own cluster reads its TCDM for free.
         self.handoffs: List[Dict] = []
         for u, v in self.node_edges:
-            nbytes = _intersect_bytes(self.nodes[u].write_ranges,
-                                      self.nodes[v].read_ranges)
             self.handoffs.append({
-                "src": u, "dst": v, "bytes": nbytes,
+                "src": u, "dst": v, "bytes": self._edge_bytes[(u, v)],
                 "cross_cluster": self.assignment[u] != self.assignment[v],
                 "stage": self.level[v]})
 

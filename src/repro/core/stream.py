@@ -52,9 +52,11 @@ _EPILOGUE_FORMS = {Opcode.RELU: "relu", Opcode.THRESH: "thresh",
 #: epilogue kinds streaming a full (m, n) matrix operand
 _MATRIX_EPILOGUES = ("residual", "mul", "sub", "mask")
 
-#: reducing opcodes with a fused chain-tail form (chain -> VSUM/MAX/MIN):
-#: the chain value is reduced in-register, one pass total.
-_REDUCE_TAILS = {Opcode.VSUM: "sum", Opcode.MAX: "max", Opcode.MIN: "min"}
+#: reducing opcodes with a fused chain-tail form (chain ->
+#: VSUM/MAX/MIN/ARGMAX/ARGMIN): the chain value is reduced in-register,
+#: one pass total; the arg tails carry the index counter too.
+_REDUCE_TAILS = {Opcode.VSUM: "sum", Opcode.MAX: "max", Opcode.MIN: "min",
+                 Opcode.ARGMAX: "argmax", Opcode.ARGMIN: "argmin"}
 
 
 # ----------------------------------------------------------------------
@@ -231,7 +233,7 @@ class FusedChain:
 class FusedChainReduce:
     """Elementwise chain with a reduction tail: the chain value is written
     back once AND reduced in-register in the same pass (softmax-style
-    numerator/denominator patterns)."""
+    numerator/denominator patterns; argmax/argmin sampling tails)."""
 
     descs: List[Descriptor]
     n: int
@@ -239,7 +241,7 @@ class FusedChainReduce:
     out_base: int
     stages: List[Tuple[str, float]]
     y_bases: List[int]
-    red_op: str                          # "sum" | "max" | "min"
+    red_op: str                # "sum" | "max" | "min" | "argmax" | "argmin"
     red_base: int                        # scalar output address
     fused: bool = True
 
@@ -302,9 +304,10 @@ class FusedGemm:
 # The planner
 # ----------------------------------------------------------------------
 def _match_reduce_tail(d: Descriptor, n: int, t_base: int) -> Optional[str]:
-    """A VSUM/MAX/MIN over exactly the chain region T, one reduction over
-    the whole stream with a single scalar store — the softmax-style tail.
-    Returns the reduce op name, or None."""
+    """A VSUM/MAX/MIN/ARGMAX/ARGMIN over exactly the chain region T, one
+    reduction over the whole stream with a single scalar store — the
+    softmax-style tail (the arg forms store the winning index, the
+    sampling tail). Returns the reduce op name, or None."""
     if (d.opcode in _REDUCE_TAILS and len(d.bounds) == 1
             and d.bounds[0] == n and d.init_level == 1 and d.store_level == 1
             and d.agu0.base == t_base and d.agu0.strides[0] == 1

@@ -62,16 +62,20 @@ def _chain_reduce_kernel(*refs, stages, n_ys: int, red: str, nk: int,
                          block: int, n_valid: int):
     """Chain stages applied per block, the chain value written back AND
     accumulated into the reduction in the same pass — the paper's streaming
-    ops feeding the wide accumulator without a second TCDM trip."""
+    ops feeding the wide accumulator without a second TCDM trip. The arg
+    tails additionally carry the index counter (comparator + index-counter
+    datapath); first-wins merging across blocks matches ``np.argmax``."""
     x_ref = refs[0]
     y_refs = refs[1:1 + n_ys]
     o_ref, r_ref = refs[1 + n_ys], refs[2 + n_ys]
-    acc_ref = refs[3 + n_ys]
+    acc_ref, idx_ref = refs[3 + n_ys], refs[4 + n_ys]
     k = pl.program_id(1)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.full_like(acc_ref, _INIT[red])
+        if red in ("argmin", "argmax"):
+            idx_ref[...] = jnp.zeros_like(idx_ref)
 
     val = x_ref[...]
     yi = 0
@@ -90,12 +94,24 @@ def _chain_reduce_kernel(*refs, stages, n_ys: int, red: str, nk: int,
         acc_ref[...] += v.sum(-1, keepdims=True)
     elif red == "min":
         acc_ref[...] = jnp.minimum(acc_ref[...], v.min(-1, keepdims=True))
-    else:
+    elif red == "max":
         acc_ref[...] = jnp.maximum(acc_ref[...], v.max(-1, keepdims=True))
+    else:
+        local = (jnp.argmin(v, -1) if red == "argmin"
+                 else jnp.argmax(v, -1)).astype(jnp.int32)[:, None]
+        best = (v.min(-1, keepdims=True) if red == "argmin"
+                else v.max(-1, keepdims=True))
+        better = ((best < acc_ref[...]) if red == "argmin"
+                  else (best > acc_ref[...]))
+        idx_ref[...] = jnp.where(better, local + k * block, idx_ref[...])
+        acc_ref[...] = jnp.where(better, best, acc_ref[...])
 
     @pl.when(k == nk - 1)
     def _store():
-        r_ref[...] = acc_ref[...]
+        if red in ("argmin", "argmax"):
+            r_ref[...] = idx_ref[...].astype(r_ref.dtype)
+        else:
+            r_ref[...] = acc_ref[...]
 
 
 def chain_reduce_pallas(stages, red: str, x: jnp.ndarray, ys: tuple = (),
@@ -104,9 +120,11 @@ def chain_reduce_pallas(stages, red: str, x: jnp.ndarray, ys: tuple = (),
     """Fused elementwise chain + reduction tail over (rows, n).
 
     Returns (chain_out (rows, n), reduction (rows, 1)). ``red`` is one of
-    sum/min/max; ``n_valid`` masks padded columns out of the reduction.
+    sum/min/max/argmin/argmax — the arg tails return the winning index
+    (as fp32; ties resolve first-wins like ``np.argmax``); ``n_valid``
+    masks padded columns out of the reduction.
     """
-    assert red in ("sum", "min", "max"), red
+    assert red in ("sum", "min", "max", "argmin", "argmax"), red
     stages = tuple((str(op), float(imm)) for op, imm in stages)
     n_ys = sum(1 for op, _ in stages if op in _OPS2)
     assert len(ys) == n_ys, (len(ys), n_ys)
@@ -124,7 +142,8 @@ def chain_reduce_pallas(stages, red: str, x: jnp.ndarray, ys: tuple = (),
         out_specs=(spec, pl.BlockSpec((rows, 1), lambda r, k: (r, 0))),
         out_shape=(jax.ShapeDtypeStruct((rows, n), x.dtype),
                    jax.ShapeDtypeStruct((rows, 1), jnp.float32)),
-        scratch_shapes=[pltpu.VMEM((rows, 1), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((rows, 1), jnp.float32),
+                        pltpu.VMEM((rows, 1), jnp.int32)],
         compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,

@@ -75,20 +75,49 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int, value=0.0):
 
 # ----------------------------------------------------------------------
 # GEMM block autotuning: scheduler-derived sizes, cached per shape.
-# NTX_AUTOTUNE=measure additionally times 2-3 candidate triples on first
-# sight of a shape (real-TPU measure-and-pick); the scheduler model is
-# the default and the fallback.
+# Mode "measure" (set via set_autotune_mode / ExecutionPolicy.autotune;
+# the NTX_AUTOTUNE env var remains as a deprecated fallback) additionally
+# times 2-3 candidate triples on first sight of a shape (real-TPU
+# measure-and-pick); the scheduler model is the default and the fallback.
 # ----------------------------------------------------------------------
 _BLOCK_CACHE: dict = {}
 _BLOCK_CACHE_STATS = {"hits": 0, "misses": 0, "measured": 0}
+
+_AUTOTUNE_MODES = ("model", "measure")
+_AUTOTUNE_OVERRIDE: str | None = None
 
 
 def _align_up(x: int, mult: int) -> int:
     return max(mult, -(-x // mult) * mult)
 
 
+def set_autotune_mode(mode: str | None) -> None:
+    """Set the process-wide autotune mode (``ExecutionPolicy.autotune``
+    drives this per run). ``None`` falls back to the deprecated
+    ``NTX_AUTOTUNE`` env var, then the ``model`` default."""
+    global _AUTOTUNE_OVERRIDE
+    if mode is not None and mode not in _AUTOTUNE_MODES:
+        raise ValueError(f"autotune mode must be one of {_AUTOTUNE_MODES}")
+    _AUTOTUNE_OVERRIDE = mode
+
+
+def get_autotune_mode() -> str:
+    return _AUTOTUNE_OVERRIDE or os.environ.get("NTX_AUTOTUNE", "model")
+
+
+@contextlib.contextmanager
+def autotune_mode(mode: str):
+    """Scoped autotune mode — what ``Executor`` wraps a run in."""
+    prev = _AUTOTUNE_OVERRIDE
+    set_autotune_mode(mode)
+    try:
+        yield
+    finally:
+        set_autotune_mode(prev)
+
+
 def _autotune_mode() -> str:
-    return os.environ.get("NTX_AUTOTUNE", "model")
+    return get_autotune_mode()
 
 
 def _autotune_measure() -> bool:
@@ -143,10 +172,12 @@ def matmul_blocks(m: int, n: int, k: int,
     the TPU tiling the kernels assume (sublane 8 / lane 128) and cached
     per shape — the autotune cache. Wrappers pad operands up to the block
     multiples, so alignment never exceeds the old padding behaviour.
-    With ``NTX_AUTOTUNE=measure`` and a Pallas backend active, the first
-    sight of a shape races candidate triples and caches the winner.
+    In autotune mode ``measure`` (``set_autotune_mode`` /
+    ``ExecutionPolicy.autotune``; the ``NTX_AUTOTUNE`` env var is the
+    deprecated fallback) with a Pallas backend active, the first sight of
+    a shape races candidate triples and caches the winner.
 
-    The memo key includes the active backend and ``NTX_AUTOTUNE`` mode in
+    The memo key includes the active backend and autotune mode in
     addition to the shape and ``dtype_bytes``: a cache warmed under
     ``ref``/``model`` must NOT be served verbatim after switching to
     ``measure``/Pallas (that would silently skip measured racing), and a
@@ -361,11 +392,13 @@ def elementwise_chain(stages, x: jnp.ndarray, ys=()) -> jnp.ndarray:
 def chain_reduce(stages, red: str, x: jnp.ndarray, ys=()):
     """Fused chain + reduction tail over the last axis of (rows, n).
 
-    ``stages`` as in :func:`elementwise_chain`; ``red`` is sum/min/max.
-    Returns ``(chain_out (rows, n), reduction (rows,))`` — the chain value
-    is materialized once AND reduced in-register in the same pass (the
-    descriptor stream's chain -> VSUM/MAX tail, e.g. a softmax-style
-    masked-probability sum).
+    ``stages`` as in :func:`elementwise_chain`; ``red`` is one of
+    sum/min/max/argmin/argmax. Returns ``(chain_out (rows, n), reduction
+    (rows,))`` — the chain value is materialized once AND reduced
+    in-register in the same pass (the descriptor stream's chain ->
+    VSUM/MAX tail, e.g. a softmax-style masked-probability sum). The arg
+    tails return the winning int32 index (the comparator + index-counter
+    datapath; ties resolve first-wins, like ``np.argmax``).
     """
     stages = tuple((str(op), float(imm)) for op, imm in stages)
     ys = tuple(ys)
@@ -385,7 +418,10 @@ def chain_reduce(stages, red: str, x: jnp.ndarray, ys=()):
     yfs = tuple(_pad_to(y, 1, block)[0] for y in ys)
     out, red_v = chain_reduce_pallas(stages, red, xf, yfs, n_valid=n0,
                                      block=block, interpret=_interp())
-    return out[:, :n0], red_v[:, 0]
+    red_v = red_v[:, 0]
+    if red in ("argmin", "argmax"):
+        red_v = red_v.astype(jnp.int32)      # ref-path parity
+    return out[:, :n0], red_v
 
 
 # ----------------------------------------------------------------------

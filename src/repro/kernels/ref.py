@@ -27,16 +27,33 @@ def axpy(a: float, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     return a * x + y
 
 
+def _rounded(v: jnp.ndarray) -> jnp.ndarray:
+    """Pin a product's fp32 rounding across compilation contexts.
+
+    Descriptor programs must be bit-identical across execution transports
+    (eager per-descriptor dispatch, fused eager chains, jitted stacked
+    vmap/shard_map lanes), but inside a jitted fusion XLA:CPU contracts
+    mul+add into an FMA — and it strips ``optimization_barrier`` /
+    equal-width ``reduce_precision``, so neither blocks it. copysign(|v|,
+    v) is a bitwise identity (incl. NaN and signed zero) that no
+    simplification removes, and its output is not an fmul, so a downstream
+    add can never contract with the multiply.
+    """
+    return jnp.copysign(jnp.abs(v), v)
+
+
 def elementwise(op: str, x: jnp.ndarray, y: jnp.ndarray | None = None,
                 imm: float = 0.0) -> jnp.ndarray:
     if op == "axpy":
-        return imm * x + y
+        return _rounded(imm * x) + y
     if op == "add":
         return x + y
     if op == "sub":
         return x - y
     if op == "mul":
-        return x * y
+        # a MUL result feeding a later ADD/SUB stage inside one fused
+        # computation is the other contractible pattern — see _rounded
+        return _rounded(x * y)
     if op == "relu":
         return jnp.maximum(x, 0)
     if op == "thresh":

@@ -223,6 +223,32 @@ def pipeline_gain(descs, n_clusters: int = 4,
 
 
 # ----------------------------------------------------------------------
+# Policy pricing: everything the Executor's auto policy consults
+# ----------------------------------------------------------------------
+def policy_gains(descs, n_clusters: int = 4,
+                 spec: NtxClusterSpec = PAPER_CLUSTER,
+                 setup_cycles: int = 100) -> Dict[str, Dict[str, float]]:
+    """All three gain ratios for one descriptor program.
+
+    ``repro.core.executor.Executor`` consults this to auto-select among
+    serial, fused-stream, multistream and stage-pipeline execution: the
+    fusion speedup is priced against one-command-at-a-time dispatch, and
+    the two mesh gains are priced against the fused sub-streams they
+    schedule — so a policy's total score vs. serial dispatch composes as
+    ``fusion * mesh`` (see ``Executor.select_policy``).
+    """
+    return {
+        "fusion": stream_fusion_gain(descs, spec=spec,
+                                     setup_cycles=setup_cycles),
+        "multistream": multistream_gain(descs, n_clusters=n_clusters,
+                                        spec=spec,
+                                        setup_cycles=setup_cycles),
+        "pipeline": pipeline_gain(descs, n_clusters=n_clusters, spec=spec,
+                                  setup_cycles=setup_cycles),
+    }
+
+
+# ----------------------------------------------------------------------
 # Paper headline claims (tested in tests/test_perfmodel.py)
 # ----------------------------------------------------------------------
 def peak_utilization_bound(spec=PAPER_CLUSTER) -> float:

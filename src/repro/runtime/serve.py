@@ -6,11 +6,13 @@ prefilled into the freed slot. Sampling uses the NTX ARGMAX command
 (greedy) or temperature sampling. Works for all decoder archs, including
 SSM/hybrid state caches.
 
-Greedy sampling routes through the multi-cluster stream scheduler
-(``core.multistream``): each request's ARGMAX over its logits row is an
-independent descriptor sub-stream (disjoint AGU ranges), so the batch
-partitions request-per-cluster and executes concurrently on the mesh —
-the serving-side use of the paper's independent per-cluster streams.
+Greedy sampling is a descriptor :class:`~repro.core.program.Program` run
+through the policy-driven :class:`~repro.core.executor.Executor`: each
+request's ARGMAX over its logits row is an independent sub-stream
+(disjoint buffers), so the batch partitions request-per-cluster and
+executes concurrently on the mesh — the serving-side use of the paper's
+independent per-cluster streams. No hand-computed base addresses: the
+program's allocator owns the layout.
 """
 from __future__ import annotations
 
@@ -23,6 +25,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core import ExecutionPolicy, Executor, Program
 from repro.models import ArchConfig, Model
 
 
@@ -37,73 +40,81 @@ class ServeConfig:
     pipeline: bool = True           # prefill sampling via the stage pipeline
 
 
-_ARGMAX_SCHEDULERS: Dict[tuple, Any] = {}
-_PREFILL_SCHEDULERS: Dict[tuple, Any] = {}
+#: (b, vocab) -> (Program, Executor, row handles, slot handles); the
+#: Executor caches its plan (and jitted transports) on the Program, so
+#: steady-state decode pays one dispatch per step.
+_ARGMAX_PROGRAMS: Dict[tuple, Any] = {}
+_PREFILL_PROGRAMS: Dict[tuple, Any] = {}
+
+
+def _sampler_entry(cache: Dict[tuple, Any], b: int, vocab: int,
+                   staged: bool, policy: str):
+    ent = cache.get((b, vocab))
+    if ent is None:
+        prog = Program()
+        rows, slots = [], []
+        for i in range(b):
+            row = prog.buffer((vocab,), name=f"row{i}")
+            if staged:
+                # COPY hands the head cluster's row off to the sampler
+                # cluster (the inter-cluster DMA), ARGMAX reduces it
+                row_staged = prog.copy(row)
+                slots.append(prog.argmax(row_staged, name=f"slot{i}"))
+            else:
+                slots.append(prog.argmax(row, name=f"slot{i}"))
+            rows.append(row)
+        ent = (prog, Executor(ExecutionPolicy(policy=policy)), rows, slots)
+        cache[(b, vocab)] = ent
+    return ent
+
+
+def _run_sampler(ent, logits) -> np.ndarray:
+    prog, executor, rows, slots = ent
+    res = executor.run(prog, inputs=dict(zip(rows, logits)))
+    return np.asarray([res[s][0] for s in slots], np.float32).astype(np.int64)
 
 
 def greedy_argmax_multistream(logits) -> np.ndarray:
     """Greedy sampling as a multi-cluster descriptor program.
 
-    Builds one ARGMAX command per request row (independent sub-streams over
-    a flat memory: [row 0 | slot 0 | row 1 | slot 1 | ...]) and dispatches
-    the graph across the cluster mesh; the scheduler (and its jitted
-    stacked program) is cached per batch shape, so steady-state decode pays
-    one dispatch. Ties resolve to the first maximum, matching ``np.argmax``.
+    One ARGMAX command per request row — independent uniform sub-streams
+    the scheduler can stack (vmap/shard_map lanes), cached per batch
+    shape. Ties resolve to the first maximum, matching ``np.argmax``.
     """
-    from repro.core import argmax as argmax_desc
-    from repro.core.multistream import ClusterScheduler
     logits = jnp.asarray(logits, jnp.float32)
     b, vocab = logits.shape
-    sched = _ARGMAX_SCHEDULERS.get((b, vocab))
-    if sched is None:
-        # [row i | slot i] per request: sub-stream windows are disjoint and
-        # uniform, so the scheduler can stack them (vmap/shard_map lanes)
-        descs = [argmax_desc(vocab, i * (vocab + 1), i * (vocab + 1) + vocab)
-                 for i in range(b)]
-        sched = ClusterScheduler(descs)
-        _ARGMAX_SCHEDULERS[(b, vocab)] = sched
-    mem = jnp.concatenate([logits, jnp.zeros((b, 1), jnp.float32)],
-                          axis=1).reshape(-1)
-    out = sched.execute(mem)
-    slots = out.reshape(b, vocab + 1)[:, vocab]
-    return np.asarray(slots, np.float32).astype(np.int64)
+    return _run_sampler(
+        _sampler_entry(_ARGMAX_PROGRAMS, b, vocab, staged=False,
+                       policy="multistream"), logits)
 
 
 def greedy_argmax_pipelined(logits) -> np.ndarray:
     """Prefill sampling as a stage-pipelined descriptor program.
 
     The LM head writes each request's logits row in its own (producer)
-    cluster; the sampler consumes it in another. Per request the program is
-    a dependent two-command chain over a ``[row | staged row | slot]``
-    layout: COPY streams the row into the sampler cluster's window (the
-    inter-cluster DMA handoff), then ARGMAX reduces the staged row to the
-    token slot. ``StageSchedule`` level-izes the chains into a head stage
-    and a sampler stage (both uniform across requests, so they stack as
-    vmap/shard_map lanes) and is cached per batch shape. Bit-equal to
-    ``np.argmax`` (ties resolve to the first maximum).
+    cluster; the sampler consumes it in another. Per request the program
+    is a dependent two-command chain: COPY streams the row into a staging
+    buffer (the inter-cluster DMA handoff), then ARGMAX reduces the staged
+    row to the token slot. ``StageSchedule`` level-izes the chains into a
+    head stage and a sampler stage (uniform across requests, so they stack
+    as vmap/shard_map lanes). Bit-equal to ``np.argmax`` (ties resolve to
+    the first maximum).
     """
-    from repro.core import Agu, Descriptor, Opcode
-    from repro.core import argmax as argmax_desc
-    from repro.core.multistream import StageSchedule
     logits = jnp.asarray(logits, jnp.float32)
     b, vocab = logits.shape
-    w = 2 * vocab + 1                      # [row | staged | slot] per request
-    sched = _PREFILL_SCHEDULERS.get((b, vocab))
-    if sched is None:
-        descs = []
-        for i in range(b):
-            row, staged, slot = i * w, i * w + vocab, i * w + 2 * vocab
-            descs.append(Descriptor(bounds=(vocab,), opcode=Opcode.COPY,
-                                    agu0=Agu(row, (1,)),
-                                    agu2=Agu(staged, (1,))))
-            descs.append(argmax_desc(vocab, staged, slot))
-        sched = StageSchedule(descs)
-        _PREFILL_SCHEDULERS[(b, vocab)] = sched
-    mem = jnp.concatenate(
-        [logits, jnp.zeros((b, vocab + 1), jnp.float32)], axis=1).reshape(-1)
-    out = sched.execute(mem)
-    slots = out.reshape(b, w)[:, 2 * vocab]
-    return np.asarray(slots, np.float32).astype(np.int64)
+    return _run_sampler(
+        _sampler_entry(_PREFILL_PROGRAMS, b, vocab, staged=True,
+                       policy="pipeline"), logits)
+
+
+def sampler_stats() -> Dict[str, Any]:
+    """Executor stats of the cached sampling programs (one per shape)."""
+    out: Dict[str, Any] = {}
+    for kind, cache in (("decode", _ARGMAX_PROGRAMS),
+                        ("prefill", _PREFILL_PROGRAMS)):
+        for (b, vocab), (_, executor, _, _) in cache.items():
+            out[f"{kind}_b{b}_v{vocab}"] = dict(executor.stats)
+    return out
 
 
 class Server:

@@ -150,23 +150,23 @@ def plan_update_multistream(params, n_clusters: Optional[int] = None,
     chains into a stage pipeline (precondition stage -> apply stage) with
     explicit producer->consumer handoffs (``StageSchedule``) and reports
     the projected pipelined speedup under ``"pipeline"``.
+
+    The program is built through :class:`repro.core.Program` — symbolic
+    grad/preconditioner/scratch/param buffers per tensor, no hand-computed
+    base addresses.
     """
-    from repro.core import Agu, Descriptor, Opcode
+    from repro.core import Program
     from repro.core.multistream import ClusterScheduler, StageSchedule
     leaves = jax.tree_util.tree_leaves(params)
-    descs = []
-    off = 0
-    for leaf in leaves:
+    prog = Program()
+    for ti, leaf in enumerate(leaves):
         n = int(np.prod(leaf.shape)) if leaf.shape else 1
-        # [grad_i | precond_i | scratch_i | param_i], tensor after tensor
-        g, p, s, w = off, off + n, off + 2 * n, off + 3 * n
-        descs.append(Descriptor(                       # scratch = grad * precond
-            bounds=(n,), opcode=Opcode.MUL,
-            agu0=Agu(g, (1,)), agu1=Agu(p, (1,)), agu2=Agu(s, (1,))))
-        descs.append(Descriptor(                       # param += -lr * scratch
-            bounds=(n,), opcode=Opcode.AXPY, imm=-1.0,
-            agu0=Agu(s, (1,)), agu1=Agu(w, (1,)), agu2=Agu(w, (1,))))
-        off += 4 * n
+        g = prog.buffer((n,), name=f"grad{ti}")
+        pre = prog.buffer((n,), name=f"precond{ti}")
+        w = prog.buffer((n,), name=f"param{ti}")
+        scratch = prog.mul(g, pre)            # scratch = grad * precond
+        prog.axpy(-1.0, scratch, w, out=w)    # param += -lr * scratch
+    descs = prog.descriptors
     if n_clusters is None:
         n_clusters = max(1, len(jax.devices()))
     sched = ClusterScheduler(descs, n_clusters=n_clusters)

@@ -524,7 +524,7 @@ if HAVE_HYPOTHESIS:
 # ----------------------------------------------------------------------
 def test_serve_prefill_pipelined_argmax():
     from repro.runtime.serve import (greedy_argmax_pipelined,
-                                     _PREFILL_SCHEDULERS)
+                                     _PREFILL_PROGRAMS)
     logits = RNG.standard_normal((6, 500)).astype(np.float32)
     np.testing.assert_array_equal(greedy_argmax_pipelined(logits),
                                   logits.argmax(-1))
@@ -532,8 +532,12 @@ def test_serve_prefill_pipelined_argmax():
     tied[0, 3] = tied[0, 5] = 2.0
     np.testing.assert_array_equal(greedy_argmax_pipelined(tied),
                                   tied.argmax(-1))
-    ss = _PREFILL_SCHEDULERS[(6, 500)]
-    assert ss.stats["n_stages"] == 2            # head stage -> sampler stage
+    # the sampler is a Program run through the pipeline policy: the
+    # Executor's StageSchedule level-izes COPY -> ARGMAX chains into a
+    # head stage and a sampler stage
+    _, executor, _, _ = _PREFILL_PROGRAMS[(6, 500)]
+    assert executor.stats["policy"] == "pipeline"
+    assert executor.stats["scheduler"]["n_stages"] == 2
 
 
 def test_train_update_plan_pipelined():
