@@ -43,6 +43,33 @@ print(f"executor picked policy {executor.stats['policy']!r}")
 print("y matches numpy :", np.allclose(res[y_h], A @ x, atol=1e-5))
 print("argmax matches  :", int(res[top][0]) == int(np.argmax(A @ x)))
 
+# ----------------------------------------------------------------- 1b.
+print("\n== 1b. out-of-core: a program 8x bigger than the TCDM ==")
+# a toy 4 KiB TCDM makes the capacity model visible at example sizes;
+# ntx.PAPER_MEM is the real 64 KiB cluster (docs/memory.md)
+tiny = ntx.NtxMemSpec(tcdm_bytes=4096)
+big_n = 4096                               # x + t = 32 KiB working set
+with ntx.Program() as big:
+    xb = big.buffer((big_n,), name="x",
+                    init=rng.standard_normal(big_n).astype(np.float32))
+    tb = big.thresh(xb, 0.2)
+    big.relu(tb, out=tb)
+    big.axpy(1.5, tb, xb, out=tb)          # in-place chain, fuses
+
+ex_tiled = ntx.Executor(ntx.ExecutionPolicy(mem=tiny))
+res_big = ex_tiled.run(big)                # auto policy consults capacity
+sched = ex_tiled.stats["scheduler"]
+print(f"executor picked policy {ex_tiled.stats['policy']!r} "
+      f"(working set {sched['working_set_bytes']} B > TCDM "
+      f"{sched['capacity_bytes']} B)")
+print(f"tile loop: {sched['n_tiles']} double-buffered "
+      f"DMA-in -> compute -> DMA-out iterations, "
+      f"{sched['dma_in_bytes']} B streamed in")
+serial = ntx.Executor(ntx.ExecutionPolicy(policy="serial"))
+print("bit-equal to serial:",
+      bool((np.asarray(res_big.mem)
+            == np.asarray(serial.run(big).mem)).all()))
+
 # ----------------------------------------------------------------- 2.
 print("\n== 2. what the builder recorded: one NTX command ==")
 desc = p.descriptors[0]

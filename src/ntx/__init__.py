@@ -16,7 +16,10 @@ under the name the paper gives the machine. See docs/api.md.
 """
 from repro.core.descriptor import Agu, Descriptor, Opcode
 from repro.core.executor import ExecutionPolicy, Executor
+from repro.core.memory import NtxMemSpec, PAPER_MEM
 from repro.core.program import BufferHandle, Program, ProgramResult
+from repro.core.tiling import TilePlan
 
 __all__ = ["Agu", "Descriptor", "Opcode", "ExecutionPolicy", "Executor",
-           "BufferHandle", "Program", "ProgramResult"]
+           "BufferHandle", "Program", "ProgramResult", "NtxMemSpec",
+           "PAPER_MEM", "TilePlan"]

@@ -11,7 +11,6 @@ tests/test_dispatch.py.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Optional
 
 import jax
@@ -128,37 +127,8 @@ def traceable_descriptor(desc: Descriptor) -> bool:
             or desc.store_level == desc.init_level)
 
 
-def dispatch_stream(descs, mem: jnp.ndarray) -> jnp.ndarray:
-    """Deprecated shim: execute a descriptor stream with command fusion.
-
-    Equivalent to (and implemented as) ``Executor().run_descriptors(descs,
-    mem, policy="fused")`` — build a :class:`~repro.core.program.Program`
-    and call :meth:`~repro.core.executor.Executor.run` instead.
-    """
-    warnings.warn(
-        "dispatch_stream is deprecated; use repro.core.Executor "
-        "(Executor().run(program) or run_descriptors(..., policy='fused'))",
-        DeprecationWarning, stacklevel=2)
-    from .executor import Executor
-    return Executor().run_descriptors(descs, mem, policy="fused")
-
-
-def dispatch_graph(descs, mem: jnp.ndarray, n_clusters: int | None = None,
-                   mode: str = "auto", pipeline: bool = False) -> jnp.ndarray:
-    """Deprecated shim: execute a program as a multi-cluster stream graph.
-
-    Equivalent to (and implemented as) ``Executor(n_clusters=...,
-    transport=mode).run_descriptors(descs, mem, policy="pipeline" if
-    pipeline else "multistream")`` — build a
-    :class:`~repro.core.program.Program` and call
-    :meth:`~repro.core.executor.Executor.run` instead. Always semantically
-    equal to ``dispatch_stream``.
-    """
-    warnings.warn(
-        "dispatch_graph is deprecated; use repro.core.Executor "
-        "(ExecutionPolicy(policy='multistream'|'pipeline', n_clusters=..., "
-        "transport=...))",
-        DeprecationWarning, stacklevel=2)
-    from .executor import Executor
-    return Executor(n_clusters=n_clusters, transport=mode).run_descriptors(
-        descs, mem, policy="pipeline" if pipeline else "multistream")
+# The deprecated ``dispatch_stream``/``dispatch_graph`` shims (PR 4)
+# are gone: build a :class:`~repro.core.program.Program` and call
+# :meth:`~repro.core.executor.Executor.run`, or use
+# ``Executor.run_descriptors(descs, mem, policy=...)`` for raw
+# descriptor lists (see docs/api.md for the migration table).

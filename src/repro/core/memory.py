@@ -1,0 +1,138 @@
+"""The cluster memory hierarchy: TCDM capacity, DMA bandwidth, HBM latency.
+
+The paper's cluster (§II) owns a small banked TCDM fed by a DMA engine;
+every working set the NTX FPUs touch must be staged through it, two
+buffers deep, so the DMA can copy tile i+1 in while the engines stream
+tile i — the double buffering behind the 87%-of-peak headline. The
+companion near-memory work (Schuiki et al., arXiv:1803.04783) runs the
+same TCDM+DMA scheme against HMC vaults.
+
+:class:`NtxMemSpec` is the single source of truth for that hierarchy —
+capacity, banking, DMA rate and backing-memory latency — with defaults
+drawn from the 22FDX cluster of :data:`~repro.core.cluster.PAPER_CLUSTER`
+and an override path from any :class:`~repro.core.cluster.NtxClusterSpec`.
+``working_set_*``/``fits`` answer the question the Executor's auto policy
+asks before running a program: does this program's footprint live in one
+TCDM, or must :class:`~repro.core.tiling.TilePlan` stream it through?
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+from .cluster import NtxClusterSpec, PAPER_CLUSTER
+from .descriptor import Descriptor
+
+Span = Tuple[int, int]
+
+_ELEM_BYTES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class NtxMemSpec:
+    """One cluster's memory hierarchy (paper Table I + §II-E).
+
+    ``tcdm_bytes``/``tcdm_banks``  the scratchpad every operand streams
+                                   through (64 KiB, 32 banks as taped out).
+    ``dma_bytes_per_cycle``        the DMA engine's AXI port width.
+    ``dma_freq_hz``                the clock that port runs at (the
+                                   cluster/AXI half-speed domain).
+    ``hbm_latency_s``              per-transfer latency of the backing
+                                   memory the DMA hides (DRAM/HMC/HBM) —
+                                   the fixed cost every tile DMA pays on
+                                   top of the bandwidth term.
+    ``elem_bytes``                 fp32 stream element size.
+    """
+
+    tcdm_bytes: int = PAPER_CLUSTER.tcdm_bytes
+    tcdm_banks: int = PAPER_CLUSTER.tcdm_banks
+    dma_bytes_per_cycle: int = PAPER_CLUSTER.axi_bytes_per_cycle
+    dma_freq_hz: float = PAPER_CLUSTER.cluster_freq_hz
+    hbm_latency_s: float = 100e-9
+    elem_bytes: int = _ELEM_BYTES
+
+    def __post_init__(self):
+        if self.tcdm_bytes < 2 * self.elem_bytes:
+            raise ValueError(f"tcdm_bytes {self.tcdm_bytes} cannot hold a "
+                             f"double-buffered element")
+        if self.elem_bytes < 1:
+            raise ValueError(f"elem_bytes must be >= 1, got {self.elem_bytes}")
+
+    @classmethod
+    def from_cluster(cls, spec: NtxClusterSpec, **overrides) -> "NtxMemSpec":
+        """The memory hierarchy implied by a cluster spec."""
+        kw = dict(tcdm_bytes=spec.tcdm_bytes, tcdm_banks=spec.tcdm_banks,
+                  dma_bytes_per_cycle=spec.axi_bytes_per_cycle,
+                  dma_freq_hz=spec.cluster_freq_hz)
+        kw.update(overrides)
+        return cls(**kw)
+
+    # -- derived rates/sizes -------------------------------------------
+    @property
+    def capacity_elems(self) -> int:
+        return self.tcdm_bytes // self.elem_bytes
+
+    @property
+    def dma_bw(self) -> float:
+        """DMA bandwidth in bytes/s (5 GB/s for the paper cluster)."""
+        return self.dma_bytes_per_cycle * self.dma_freq_hz
+
+    @property
+    def buffer_budget_elems(self) -> int:
+        """Elements ONE tile may occupy: half the TCDM, because every
+        operand is double-buffered (tile i computes in one bank while the
+        DMA fills the other)."""
+        return max(1, self.capacity_elems // 2)
+
+    def dma_time_s(self, nbytes: int) -> float:
+        """One DMA transfer: latency + bandwidth term."""
+        return self.hbm_latency_s + nbytes / self.dma_bw
+
+    def pallas_block_elems(self, n_streams: int, align: int = 128,
+                           max_block: int = 4096) -> int:
+        """A Pallas grid block sized like a TCDM tile: ``n_streams``
+        operand streams, two buffers each (the pltpu pipeline's automatic
+        double buffering), aligned to the TPU lane count. This is how the
+        fused elementwise kernels emulate the paper's DMA overlap with
+        the grid the compiler pipelines natively."""
+        per_stream = self.buffer_budget_elems // max(1, n_streams)
+        block = max(align, (per_stream // align) * align)
+        return min(block, max_block)
+
+
+#: the paper's 22FDX cluster hierarchy — the process-wide default
+PAPER_MEM = NtxMemSpec()
+
+
+# ----------------------------------------------------------------------
+# Working-set analysis
+# ----------------------------------------------------------------------
+def working_set_spans(descs: Sequence[Descriptor]) -> List[Span]:
+    """Merged [lo, hi) element spans a program touches (reads + writes) —
+    the conservative AGU footprint, same accounting as the dependency
+    analysis in ``core.stream``."""
+    from .stream import desc_spans, merge_spans
+    spans: List[Span] = []
+    for d in descs:
+        reads, write = desc_spans(d)
+        spans.extend(reads)
+        spans.append(write)
+    return merge_spans(spans)
+
+
+def working_set_elems(descs: Sequence[Descriptor]) -> int:
+    return sum(hi - lo for lo, hi in working_set_spans(descs))
+
+
+def working_set_bytes(descs: Sequence[Descriptor],
+                      elem_bytes: int = _ELEM_BYTES) -> int:
+    return elem_bytes * working_set_elems(descs)
+
+
+def fits(descs: Sequence[Descriptor],
+         mem: NtxMemSpec = PAPER_MEM) -> bool:
+    """True iff the program's whole working set is TCDM-resident — the
+    assumption every non-tiled execution policy silently makes. When this
+    is False the Executor's auto policy routes through
+    :class:`~repro.core.tiling.TilePlan` instead."""
+    return working_set_bytes(descs, mem.elem_bytes) <= mem.tcdm_bytes

@@ -36,8 +36,17 @@ This module builds that layer on top of ``core.stream``:
   conflicting pair, so execution stays bit-equivalent to the serial
   stream.
 
-``dispatch.dispatch_graph`` is the one-call entry point
-(``pipeline=True`` selects :class:`StageSchedule`).
+Stages need not be *hard* barriers: ``execute(mem, mode="overlap")``
+runs the §IV overlapped schedule — every stage's DMA-in (its nodes'
+window gathers, which depend only on the pre-program image) is issued
+before the previous stage's tail compute, handoffs stream
+producer-window -> consumer-window directly, and all write-backs defer
+to the end (legal because distinct pipeline nodes have disjoint write
+hulls by construction). ``repro.perfmodel.ntx.pipeline_gain`` prices
+both schedules.
+
+``repro.core.Executor`` (``ExecutionPolicy(policy="pipeline",
+transport=...)``) is the one-call entry point.
 """
 from __future__ import annotations
 
@@ -483,6 +492,10 @@ class ClusterScheduler:
         return _substreams_traceable(self.substreams)
 
     def plan_mode(self, mode: str = "auto") -> str:
+        if mode == "overlap":
+            # stage overlap is a pipeline concept; independent sub-streams
+            # have no stage boundaries, so fall back to the best transport
+            mode = "auto"
         if mode != "auto":
             return mode
         if self.uniform() and self.traceable():
@@ -585,6 +598,7 @@ class StageSchedule:
         in_edges: Dict[int, List[Tuple[int, int]]] = {}
         for (u, v), nbytes in self._edge_bytes.items():
             in_edges.setdefault(v, []).append((u, nbytes))
+        self._in_edges = in_edges
 
         # Handoff-aware stage LPT: nodes go longest-first onto the cluster
         # minimising (stage load + the DMA a non-co-located placement
@@ -628,6 +642,7 @@ class StageSchedule:
                                        if h["cross_cluster"]),
             "serial_time_s": sum(self.costs),
             "pipeline_time_s": self.model_time(),
+            "pipeline_overlap_time_s": self.model_time(overlap=True),
             "stage_times_s": self.stage_times(),
             "mode_used": None,
         }
@@ -648,12 +663,34 @@ class StageSchedule:
         nbytes = sum(h["bytes"] for h in self.handoffs if h["cross_cluster"])
         return nbytes / self.spec.practical_bw
 
-    def model_time(self) -> float:
-        """Pipelined time: sum of stage critical paths + handoff DMA."""
-        return sum(self.stage_times()) + self.handoff_time()
+    def overlap_handoff_time(self) -> float:
+        """Cross-cluster handoff DMA *not* hidden by the overlapped
+        schedule. A handoff u -> v can start the moment u finishes and
+        stream while u's stage still runs its critical path, so the
+        hidden budget per edge is the producer stage's slack after u:
+        ``stage_t[level(u)] - cost(u)``. Only the excess is exposed —
+        the §IV "DMA-in of stage s+1 under stage s's tail compute"."""
+        bw = self.spec.practical_bw
+        stage_t = self.stage_times()
+        exposed = 0.0
+        for h in self.handoffs:
+            if not h["cross_cluster"]:
+                continue
+            u = h["src"]
+            slack = max(0.0, stage_t[self.level[u]] - self.costs[u])
+            exposed += max(0.0, h["bytes"] / bw - slack)
+        return exposed
 
-    def model_speedup(self) -> float:
-        t = self.model_time()
+    def model_time(self, overlap: bool = False) -> float:
+        """Pipelined time: sum of stage critical paths + handoff DMA
+        (all of it under the barrier schedule, only the un-hidden excess
+        under the overlapped one)."""
+        handoff = (self.overlap_handoff_time() if overlap
+                   else self.handoff_time())
+        return sum(self.stage_times()) + handoff
+
+    def model_speedup(self, overlap: bool = False) -> float:
+        t = self.model_time(overlap)
         return sum(self.costs) / t if t > 0 else 1.0
 
     def plan_stage_mode(self, stage: Sequence[int], mode: str = "auto") -> str:
@@ -668,11 +705,59 @@ class StageSchedule:
         return "interleave"
 
     # -- execution -----------------------------------------------------
+    def _execute_overlap(self, mem: jnp.ndarray) -> jnp.ndarray:
+        """The §IV overlapped schedule (no hard stage barriers).
+
+        Every node's base window gathers from the PRE-program image —
+        the next stage's DMA-in is issued before the current stage's
+        tail compute, which the functional data flow then allows to
+        overlap. Dependent data moves producer-window ->
+        consumer-window (the inter-cluster DMA through L2) instead of
+        round-tripping through a global barrier write-back, and all
+        write-backs defer to the end — legal because distinct pipeline
+        nodes have disjoint write hulls (write-overlap grouping), so
+        they commute. Bit-equal to the barrier schedule: consumers see
+        exactly the producer spans they saw before, everything else
+        comes from the untouched original image.
+        """
+        windows: Dict[int, jnp.ndarray] = {}
+        for i in self.stages[0] if self.stages else []:
+            nd = self.nodes[i]
+            windows[i] = mem[nd.lo:nd.hi]
+        for si, stage in enumerate(self.stages):
+            if si + 1 < len(self.stages):
+                # stage s+1's DMA-in, issued before stage s computes
+                for i in self.stages[si + 1]:
+                    nd = self.nodes[i]
+                    windows[i] = mem[nd.lo:nd.hi]
+            for i in stage:
+                nd = self.nodes[i]
+                w = windows[i]
+                for u, _ in self._in_edges.get(i, ()):
+                    und = self.nodes[u]
+                    for lo, hi in und.write_ranges:
+                        plo, phi = max(lo, nd.lo), min(hi, nd.hi)
+                        if plo < phi:
+                            w = w.at[plo - nd.lo:phi - nd.lo].set(
+                                windows[u][plo - und.lo:phi - und.lo])
+                st = nd.stream._fresh_stats()
+                for g in nd.stream.groups:
+                    w = g.run(w, st)
+                windows[i] = w
+        for i, nd in enumerate(self.nodes):
+            for lo, hi in nd.write_ranges:
+                mem = mem.at[lo:hi].set(windows[i][lo - nd.lo:hi - nd.lo])
+        return mem
+
     def execute(self, mem, mode: str = "auto") -> jnp.ndarray:
         mem = jnp.asarray(mem, jnp.float32)
         if mode == "serial":
             self.stats["mode_used"] = "serial"
             return CommandStream(self.graph.descs).execute(mem)
+        if mode == "overlap":
+            self.stats["mode_used"] = "overlap"
+            self.stats["stage_modes"] = ["overlap"] * len(self.stages)
+            return self._execute_overlap(mem)
         if mode not in ("auto", "vmap", "shard_map", "interleave"):
             raise ValueError(f"unknown mode {mode!r}")
         stage_modes = []

@@ -108,12 +108,19 @@ def _chain_kernel(*refs, stages, n_ys: int):
 
 def elementwise_chain_pallas(stages, x: jnp.ndarray,
                              ys: tuple = (), block: int = 1024,
-                             interpret: bool = False) -> jnp.ndarray:
+                             interpret: bool = False,
+                             double_buffer: bool = False) -> jnp.ndarray:
     """Fused chain over a 2-D (rows, n) array: one read of ``x``, one read
     per external operand, one write — no intermediate HBM round trips.
 
     ``stages``: sequence of (op, imm); ops from the NTX streaming command
     set. ``ys``: one (rows, n) array per 2-read stage, in stage order.
+
+    ``double_buffer=True`` marks the grid ``arbitrary`` (sequential), so
+    the Mosaic pipeline stages block i+1's HBM->VMEM copies under block
+    i's compute — the native analogue of the TCDM double buffering that
+    ``core.tiling.TilePlan`` emulates on the host, with ``block`` sized
+    from the memory model (``NtxMemSpec.pallas_block_elems``).
     """
     stages = tuple((str(op), float(imm)) for op, imm in stages)
     n_ys = sum(1 for op, _ in stages if op in _OPS2)
@@ -129,7 +136,8 @@ def elementwise_chain_pallas(stages, x: jnp.ndarray,
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
         compiler_params=compat.CompilerParams(
-            dimension_semantics=("parallel",)),
+            dimension_semantics=(
+                ("arbitrary",) if double_buffer else ("parallel",))),
         interpret=interpret,
     )(*args)
 

@@ -4,7 +4,20 @@ The mapping from the paper's machine to this kernel is 1:1:
 
   NTX hardware loops (outer levels)  ->  the Pallas ``grid`` (i, j, k)
   AGU affine addressing              ->  ``BlockSpec.index_map``
-  TCDM tiles + DMA double buffering  ->  Pallas' automatic HBM->VMEM pipeline
+  TCDM tiles + DMA double buffering  ->  the memory-hierarchy subsystem:
+                                         ``core.memory.NtxMemSpec`` models
+                                         the capacity/DMA rates, block
+                                         sizes come from the double-buffer
+                                         tile scheduler through the
+                                         autotune cache (``ops.matmul_
+                                         blocks``), and programs whose
+                                         working set exceeds TCDM are
+                                         rewritten into explicit
+                                         DMA-in -> compute -> DMA-out tile
+                                         loops by ``core.tiling.TilePlan``
+                                         (within one kernel call the
+                                         Mosaic grid pipeline stages the
+                                         same scheme natively)
   PCS wide accumulator               ->  fp32 VMEM scratch accumulator,
                                          written back (rounded) ONCE at the
                                          last k-step (init_level/store_level

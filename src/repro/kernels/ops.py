@@ -357,12 +357,20 @@ def axpy(a: float, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
     return elementwise("axpy", x, y, imm=a)
 
 
-def elementwise_chain(stages, x: jnp.ndarray, ys=()) -> jnp.ndarray:
+def elementwise_chain(stages, x: jnp.ndarray, ys=(),
+                      block: int | None = None) -> jnp.ndarray:
     """Fused chain of streaming commands: one pass over ``x``.
 
     ``stages``: sequence of (op, imm). Each 2-read op consumes the next
     array from ``ys``. Equivalent to folding ``elementwise`` over the
     stages, but the value never leaves registers between stages.
+
+    An explicit ``block`` requests a *double-buffered grid* on the Pallas
+    backends: the grid runs sequentially and the Mosaic pipeline copies
+    block i+1 in under block i's compute — the TCDM scheme of
+    ``core.memory``/``core.tiling`` realised natively. Size it from the
+    memory model: ``NtxMemSpec.pallas_block_elems(n_streams)``. ``None``
+    keeps the default parallel grid (and is a no-op on the ref backend).
     """
     stages = tuple((str(op), float(imm)) for op, imm in stages)
     ys = tuple(ys)
@@ -378,14 +386,17 @@ def elementwise_chain(stages, x: jnp.ndarray, ys=()) -> jnp.ndarray:
         return val
     shape = x.shape
     flat = x.reshape(1, -1)
-    block = 1024 if flat.shape[1] >= 1024 else 128
+    double_buffer = block is not None
+    if block is None:
+        block = 1024 if flat.shape[1] >= 1024 else 128
     xf, n0 = _pad_to(flat, 1, block)
     yfs = []
     for y in ys:
         yf, _ = _pad_to(y.reshape(1, -1), 1, block)
         yfs.append(yf)
     out = elementwise_chain_pallas(stages, xf, tuple(yfs), block=block,
-                                   interpret=_interp())
+                                   interpret=_interp(),
+                                   double_buffer=double_buffer)
     return out[:, :n0].reshape(shape)
 
 

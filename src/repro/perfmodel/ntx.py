@@ -18,6 +18,7 @@ import dataclasses
 from typing import Dict, Optional
 
 from repro.core.cluster import NtxClusterSpec, PAPER_CLUSTER, ntx_multi_cluster
+from repro.core.memory import NtxMemSpec
 from repro.core import scheduler as sched
 
 
@@ -209,17 +210,82 @@ def pipeline_gain(descs, n_clusters: int = 4,
     stage_t = ss.stage_times()
     t_handoff = ss.handoff_time()
     t_pipe = ss.model_time()
+    t_over = ss.model_time(overlap=True)
     return {"n_nodes": float(len(ss.nodes)),
             "n_edges": float(len(ss.node_edges)),
             "n_stages": float(len(ss.stages)),
             "n_clusters": float(ss.n_clusters),
             "time_serial_s": t_serial,
             "time_pipeline_s": t_pipe,
+            "time_pipeline_overlap_s": t_over,
             "time_handoff_s": t_handoff,
+            "time_handoff_exposed_s": ss.overlap_handoff_time(),
             "handoff_bytes": float(ss.stats["handoff_bytes"]),
             "handoff_bytes_cross": float(ss.stats["handoff_bytes_cross"]),
             "speedup": _ratio(t_serial, t_pipe),
+            "overlap_speedup": _ratio(t_serial, t_over),
             "stage_times_s": stage_t}
+
+
+# ----------------------------------------------------------------------
+# Out-of-core tiling (§II-E double buffering / §IV overlap roofline)
+# ----------------------------------------------------------------------
+def tiling_gain(descs, mem: Optional[NtxMemSpec] = None,
+                spec: NtxClusterSpec = PAPER_CLUSTER,
+                setup_cycles: int = 100) -> Dict[str, float]:
+    """Price a descriptor program streamed through TCDM tiles
+    (``core.tiling.TilePlan``), double-buffered vs. not.
+
+    Per tile the DMA pays latency + bytes/bandwidth each way and the
+    engines pay flops at the derated practical rate plus the per-command
+    offload setup. Without a DMA engine the three phases add
+    (``time_tiled_serial_s``); with double buffering the steady-state
+    tile costs max(compute, dma) and only the first tile's DMA-in is
+    exposed (``time_tiled_overlap_s``) — the §IV roofline the Executor's
+    auto policy consults, and the model the ``tiling`` benchmark section
+    checks against measured ratios.
+
+    ``fits`` reports whether tiling was needed at all: a program whose
+    working set exceeds ``mem.tcdm_bytes`` cannot faithfully run under
+    any resident policy.
+    """
+    from repro.core.memory import working_set_bytes
+    from repro.core.tiling import TilePlan
+    if mem is None:
+        mem = NtxMemSpec.from_cluster(spec)
+    ws_early = working_set_bytes(descs, mem.elem_bytes)
+    if ws_early <= mem.tcdm_bytes:
+        # resident program: the capacity verdict is all the auto policy
+        # needs — don't pay for a tile rewrite that would be discarded
+        return {"fits": 1.0,
+                "working_set_bytes": float(ws_early),
+                "capacity_bytes": float(mem.tcdm_bytes),
+                "n_tiles": 0.0, "n_spill_items": 0.0, "dma_bytes": 0.0,
+                "time_tiled_serial_s": 0.0, "time_tiled_overlap_s": 0.0,
+                "speedup": 1.0}
+    plan = TilePlan(descs, mem)
+    setup = setup_cycles / spec.ntx_freq_hz
+    t_serial = 0.0
+    t_overlap = 0.0
+    for tile in plan.tiles:
+        tc = tile.flops() / spec.practical_flops + setup
+        td_in = mem.dma_time_s(tile.in_bytes) if tile.in_bytes else 0.0
+        td_out = mem.dma_time_s(tile.out_bytes) if tile.out_bytes else 0.0
+        t_serial += td_in + tc + td_out
+        t_overlap += max(tc, td_in + td_out)
+    if plan.tiles:
+        first = plan.tiles[0]
+        t_overlap += mem.dma_time_s(first.in_bytes) if first.in_bytes else 0.0
+    return {"fits": 0.0,
+            "working_set_bytes": float(ws_early),
+            "capacity_bytes": float(mem.tcdm_bytes),
+            "n_tiles": float(plan.stats["n_tiles"]),
+            "n_spill_items": float(plan.stats["n_spill_items"]),
+            "dma_bytes": float(plan.stats["dma_in_bytes"]
+                               + plan.stats["dma_out_bytes"]),
+            "time_tiled_serial_s": t_serial,
+            "time_tiled_overlap_s": t_overlap,
+            "speedup": _ratio(t_serial, t_overlap)}
 
 
 # ----------------------------------------------------------------------
@@ -227,15 +293,21 @@ def pipeline_gain(descs, n_clusters: int = 4,
 # ----------------------------------------------------------------------
 def policy_gains(descs, n_clusters: int = 4,
                  spec: NtxClusterSpec = PAPER_CLUSTER,
-                 setup_cycles: int = 100) -> Dict[str, Dict[str, float]]:
-    """All three gain ratios for one descriptor program.
+                 setup_cycles: int = 100,
+                 mem: Optional[NtxMemSpec] = None
+                 ) -> Dict[str, Dict[str, float]]:
+    """All four gain ratios for one descriptor program.
 
     ``repro.core.executor.Executor`` consults this to auto-select among
-    serial, fused-stream, multistream and stage-pipeline execution: the
-    fusion speedup is priced against one-command-at-a-time dispatch, and
-    the two mesh gains are priced against the fused sub-streams they
-    schedule — so a policy's total score vs. serial dispatch composes as
-    ``fusion * mesh`` (see ``Executor.select_policy``).
+    serial, fused-stream, multistream, stage-pipeline and tiled
+    execution: the fusion speedup is priced against one-command-at-a-time
+    dispatch, and the two mesh gains are priced against the fused
+    sub-streams they schedule — so a policy's total score vs. serial
+    dispatch composes as ``fusion * mesh`` (see
+    ``Executor.select_policy``). The ``tiling`` entry carries the
+    capacity verdict: when ``tiling["fits"]`` is 0 the resident policies
+    are unfaithful to the machine and the Executor routes through
+    ``core.tiling.TilePlan`` regardless of the other scores.
     """
     return {
         "fusion": stream_fusion_gain(descs, spec=spec,
@@ -245,6 +317,8 @@ def policy_gains(descs, n_clusters: int = 4,
                                         setup_cycles=setup_cycles),
         "pipeline": pipeline_gain(descs, n_clusters=n_clusters, spec=spec,
                                   setup_cycles=setup_cycles),
+        "tiling": tiling_gain(descs, mem=mem, spec=spec,
+                              setup_cycles=setup_cycles),
     }
 
 

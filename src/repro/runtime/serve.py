@@ -6,13 +6,18 @@ prefilled into the freed slot. Sampling uses the NTX ARGMAX command
 (greedy) or temperature sampling. Works for all decoder archs, including
 SSM/hybrid state caches.
 
-Greedy sampling is a descriptor :class:`~repro.core.program.Program` run
-through the policy-driven :class:`~repro.core.executor.Executor`: each
-request's ARGMAX over its logits row is an independent sub-stream
+Both samplers are descriptor :class:`~repro.core.program.Program`\\ s run
+through the policy-driven :class:`~repro.core.executor.Executor`. Greedy:
+each request's ARGMAX over its logits row is an independent sub-stream
 (disjoint buffers), so the batch partitions request-per-cluster and
 executes concurrently on the mesh — the serving-side use of the paper's
-independent per-cluster streams. No hand-computed base addresses: the
-program's allocator owns the layout.
+independent per-cluster streams. Temperature: sampling prep is the
+streaming chain scale-by-temperature (AXPY ``logits/T + gumbel`` — the
+Gumbel-max identity makes the added noise an exact draw from the softmax
+distribution) -> optional THRESH prune -> ARGMAX chain-reduce tail, one
+fused pass per request, regression-tested against ``jax.nn.softmax``
+sampling. No hand-computed base addresses: the program's allocator owns
+the layout.
 """
 from __future__ import annotations
 
@@ -36,8 +41,13 @@ class ServeConfig:
     eos_token: int = 1
     temperature: float = 0.0
     seed: int = 0
-    multistream: bool = True        # greedy argmax via the cluster scheduler
+    multistream: bool = True        # sampling programs via the cluster mesh
     pipeline: bool = True           # prefill sampling via the stage pipeline
+    #: optional THRESH prune in the temperature-sampling chain: perturbed
+    #: scaled logits at or below the floor drop to 0 before the ARGMAX
+    #: tail (epsilon-style pruning in logit space; None disables the
+    #: stage)
+    min_logit: Optional[float] = None
 
 
 #: (b, vocab) -> (Program, Executor, row handles, slot handles); the
@@ -45,6 +55,15 @@ class ServeConfig:
 #: steady-state decode pays one dispatch per step.
 _ARGMAX_PROGRAMS: Dict[tuple, Any] = {}
 _PREFILL_PROGRAMS: Dict[tuple, Any] = {}
+#: (b, vocab, temperature, min_logit) -> (Program, Executor, rows,
+#: noise handles, slot handles) for the temperature-sampling chains
+_TEMPERATURE_PROGRAMS: Dict[tuple, Any] = {}
+
+#: positive bias applied (via the noise operand) when ``min_logit``
+#: prunes: THRESH zeroes pruned entries, and the shift keeps every
+#: *surviving* perturbed logit above 0 so a pruned token can never win
+#: the ARGMAX. Power of two; assumes |logits/T + gumbel| < 1024.
+_PRUNE_SHIFT = 1024.0
 
 
 def _sampler_entry(cache: Dict[tuple, Any], b: int, vocab: int,
@@ -107,13 +126,79 @@ def greedy_argmax_pipelined(logits) -> np.ndarray:
                        policy="pipeline"), logits)
 
 
+def temperature_sample_multistream(logits, temperature: float, gumbel,
+                                   min_logit: Optional[float] = None
+                                   ) -> np.ndarray:
+    """Batched temperature sampling as a descriptor program on the mesh.
+
+    Per request the sampling prep is one fused streaming chain:
+    scale-by-temperature (``AXPY``: ``logits/T + gumbel``) -> optional
+    ``THRESH`` prune -> ``ARGMAX`` chain-reduce tail. By the Gumbel-max
+    identity, ``argmax(logits/T + g)`` with i.i.d. standard Gumbel ``g``
+    is an exact draw from ``softmax(logits/T)`` — so the ARGMAX tail (the
+    comparator + index-counter datapath) IS the categorical sampler, no
+    exp/normalise pass needed. Every request's chain is an independent
+    uniform sub-stream, so the batch executes request-per-cluster
+    (stacked vmap / shard_map lanes), exactly like greedy decode.
+
+    ``gumbel`` is the (b, vocab) noise array — drawn by the caller so
+    sampling stays reproducible and testable. With ``min_logit`` set, a
+    THRESH stage prunes: tokens whose perturbed scaled logit is at or
+    below the floor drop out of the lottery (epsilon-style pruning).
+    Because THRESH zeroes rather than removes, the chain runs shifted by
+    ``_PRUNE_SHIFT`` (folded into the noise operand, threshold shifted
+    to match) so every surviving value stays positive and a pruned token
+    can never out-rank a survivor; when *everything* is pruned the row
+    is all zeros and the first index wins. The shift assumes
+    ``|logits/T + gumbel| < 1024`` and may merge survivors closer than
+    ~1e-4 (fp32 resolution at the shifted magnitude).
+    """
+    if temperature <= 0:
+        raise ValueError(f"temperature must be > 0, got {temperature}")
+    logits = jnp.asarray(logits, jnp.float32)
+    b, vocab = logits.shape
+    key = (b, vocab, float(temperature),
+           None if min_logit is None else float(min_logit))
+    ent = _TEMPERATURE_PROGRAMS.get(key)
+    if ent is None:
+        prog = Program()
+        rows, noises, slots = [], [], []
+        for i in range(b):
+            row = prog.buffer((vocab,), name=f"row{i}")
+            g = prog.buffer((vocab,), name=f"g{i}")
+            z = prog.axpy(1.0 / temperature, row, g)
+            if min_logit is not None:
+                prog.thresh(z, min_logit + _PRUNE_SHIFT, out=z)
+            slots.append(prog.argmax(z, name=f"slot{i}"))
+            rows.append(row)
+            noises.append(g)
+        ent = (prog, Executor(ExecutionPolicy(policy="multistream")),
+               rows, noises, slots)
+        _TEMPERATURE_PROGRAMS[key] = ent
+    prog, executor, rows, noises, slots = ent
+    gumbel = jnp.asarray(gumbel, jnp.float32)
+    if min_logit is not None:
+        gumbel = gumbel + jnp.float32(_PRUNE_SHIFT)
+    inputs: Dict[Any, Any] = dict(zip(rows, logits))
+    inputs.update(zip(noises, gumbel))
+    res = executor.run(prog, inputs=inputs)
+    return np.asarray([res[s][0] for s in slots], np.float32).astype(np.int64)
+
+
 def sampler_stats() -> Dict[str, Any]:
     """Executor stats of the cached sampling programs (one per shape)."""
     out: Dict[str, Any] = {}
     for kind, cache in (("decode", _ARGMAX_PROGRAMS),
-                        ("prefill", _PREFILL_PROGRAMS)):
-        for (b, vocab), (_, executor, _, _) in cache.items():
-            out[f"{kind}_b{b}_v{vocab}"] = dict(executor.stats)
+                        ("prefill", _PREFILL_PROGRAMS),
+                        ("temperature", _TEMPERATURE_PROGRAMS)):
+        for key, ent in cache.items():
+            b, vocab = key[0], key[1]
+            name = f"{kind}_b{b}_v{vocab}"
+            if kind == "temperature":
+                name += f"_T{key[2]:g}"       # one entry per (T, floor)
+                if key[3] is not None:
+                    name += f"_floor{key[3]:g}"
+            out[name] = dict(ent[1].stats)
     return out
 
 
@@ -131,6 +216,12 @@ class Server:
             return greedy_argmax_pipelined(logits)
         if self.scfg.temperature <= 0 and self.scfg.multistream:
             return greedy_argmax_multistream(logits)
+        if self.scfg.temperature > 0 and self.scfg.multistream:
+            # sampling prep runs as a descriptor program on the mesh;
+            # the host only draws the Gumbel noise
+            g = rng.gumbel(size=np.asarray(logits).shape)
+            return temperature_sample_multistream(
+                logits, self.scfg.temperature, g, self.scfg.min_logit)
         logits = np.asarray(logits, np.float32)
         if self.scfg.temperature <= 0:
             return logits.argmax(-1)

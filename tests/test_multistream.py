@@ -17,8 +17,14 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core import (Agu, ClusterScheduler, CommandStream, Descriptor,
-                        Opcode, StreamGraph, argmax, dispatch_graph, gemm,
+                        Executor, Opcode, StreamGraph, argmax, gemm,
                         memcpy, memset)
+
+
+def dispatch_graph(descs, mem):
+    """The old one-call facade, retargeted at the Executor front door
+    (the deprecated shim was removed)."""
+    return Executor().run_descriptors(descs, mem, policy="multistream")
 from repro.core.multistream import _lpt_assign, desc_spans
 
 try:

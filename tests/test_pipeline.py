@@ -20,8 +20,16 @@ import pytest
 import jax.numpy as jnp
 
 from repro.core import (Agu, ClusterScheduler, CommandStream, Descriptor,
-                        Opcode, StageSchedule, StreamGraph, dispatch,
-                        dispatch_graph, gemm, memcpy, memset, relu)
+                        Executor, Opcode, StageSchedule, StreamGraph,
+                        dispatch, gemm, memcpy, memset, relu)
+
+
+def dispatch_graph(descs, mem, n_clusters=None, mode="auto",
+                   pipeline=False):
+    """The old one-call facade, retargeted at the Executor front door
+    (the deprecated shim was removed)."""
+    return Executor(n_clusters=n_clusters, transport=mode).run_descriptors(
+        descs, mem, policy="pipeline" if pipeline else "multistream")
 from repro.core.multistream import _lpt_assign
 from repro.core.stream import agu_span, program_spans, spans_overlap
 

@@ -3,11 +3,9 @@
 Covers the allocator (alignment, non-overlap, deterministic layout),
 pack/unpack, descriptor lowering, the Executor's policy auto-selection
 (mocked gain ratios -> expected policy), bit-equality of every execution
-policy on fixed and random programs, the deprecated ``dispatch_*`` shims,
-the ARGMAX/ARGMIN chain tails and the handoff-aware stage LPT.
+policy on fixed and random programs, removal of the old ``dispatch_*``
+shims, the ARGMAX/ARGMIN chain tails and the handoff-aware stage LPT.
 """
-import warnings
-
 import numpy as np
 import pytest
 
@@ -15,7 +13,7 @@ import jax.numpy as jnp
 
 import ntx
 from repro.core import (CommandStream, ExecutionPolicy, Executor, Opcode,
-                        Program, dispatch_graph, dispatch_stream, engine)
+                        Program, engine)
 from repro.core.dispatch import _match_gemm, dispatch
 from repro.core.multistream import StageSchedule
 from repro.core.stream import FusedChainReduce, plan_stream
@@ -232,10 +230,11 @@ def test_random_programs_bit_equal_across_policies():
 # ----------------------------------------------------------------------
 # Policy auto-selection
 # ----------------------------------------------------------------------
-def _fake_gains(fusion, multi, pipe):
+def _fake_gains(fusion, multi, pipe, fits=1.0):
     return {"fusion": {"speedup": fusion},
             "multistream": {"speedup": multi},
-            "pipeline": {"speedup": pipe}}
+            "pipeline": {"speedup": pipe},
+            "tiling": {"speedup": 1.0, "fits": fits}}
 
 
 @pytest.mark.parametrize("fusion,multi,pipe,want", [
@@ -253,6 +252,16 @@ def test_auto_policy_selection_mocked_gains(monkeypatch, fusion, multi,
     chosen, gains = Executor().select_policy([])
     assert chosen == want
     assert set(gains["scores"]) == set(("serial",) + POLICIES)
+
+
+def test_auto_policy_capacity_overrides_scores(monkeypatch):
+    """A working set the TCDM cannot hold forces tiling no matter how
+    good the resident policies look on paper."""
+    monkeypatch.setattr("repro.perfmodel.ntx.policy_gains",
+                        lambda *a, **k: _fake_gains(9.0, 9.0, 9.0,
+                                                    fits=0.0))
+    chosen, _ = Executor().select_policy([])
+    assert chosen == "tiled"
 
 
 def test_auto_policy_override_per_call():
@@ -327,28 +336,32 @@ def test_policy_backend_scopes_the_run(monkeypatch):
 
 
 # ----------------------------------------------------------------------
-# Deprecated shims
+# The old dispatch_* shims are gone; run_descriptors is the raw layer
 # ----------------------------------------------------------------------
-def test_dispatch_shims_deprecated_and_bit_equal():
+def test_dispatch_shims_removed():
+    """The PR-4 deprecation ran its course: the shims no longer exist
+    anywhere in the public surface."""
+    import repro.core
+    import repro.core.dispatch
+    for mod in (repro.core, repro.core.dispatch):
+        assert not hasattr(mod, "dispatch_stream")
+        assert not hasattr(mod, "dispatch_graph")
+    assert "dispatch_stream" not in repro.core.__all__
+    assert "dispatch_graph" not in repro.core.__all__
+
+
+def test_run_descriptors_matches_run_per_policy():
+    """The raw-descriptor layer the shims used to wrap is bit-equal to
+    the Program front door under every forced policy."""
     p, x, y, *_ = _chain_program(128)
     inputs = {x: _arr(128), y: _arr(128)}
     mem = p.pack(inputs)
     descs = p.descriptors
-    with pytest.deprecated_call():
-        via_stream = dispatch_stream(descs, mem)
-    with pytest.deprecated_call():
-        via_graph = dispatch_graph(descs, mem)
-    with pytest.deprecated_call():
-        via_pipe = dispatch_graph(descs, mem, pipeline=True)
-    want_fused = np.asarray(
-        Executor(policy="fused").run(p, inputs=inputs).mem)
-    want_ms = np.asarray(
-        Executor(policy="multistream").run(p, inputs=inputs).mem)
-    want_pipe = np.asarray(
-        Executor(policy="pipeline").run(p, inputs=inputs).mem)
-    np.testing.assert_array_equal(np.asarray(via_stream), want_fused)
-    np.testing.assert_array_equal(np.asarray(via_graph), want_ms)
-    np.testing.assert_array_equal(np.asarray(via_pipe), want_pipe)
+    for pol in ("fused", "multistream", "pipeline"):
+        via_raw = Executor().run_descriptors(descs, mem, policy=pol)
+        want = np.asarray(Executor(policy=pol).run(p, inputs=inputs).mem)
+        np.testing.assert_array_equal(np.asarray(via_raw), want,
+                                      err_msg=pol)
 
 
 # ----------------------------------------------------------------------

@@ -10,7 +10,13 @@ import jax.numpy as jnp
 
 from repro.core import (Agu, CommandStream, Descriptor, Opcode, engine, gemm,
                         plan_stream)
-from repro.core.dispatch import dispatch_stream
+from repro.core import Executor
+
+
+def dispatch_stream(descs, mem):
+    """The old fused-stream facade, retargeted at the Executor front
+    door (the deprecated shim was removed)."""
+    return Executor().run_descriptors(descs, mem, policy="fused")
 from repro.kernels import ops, ref
 
 RNG = np.random.default_rng(11)

@@ -1,0 +1,459 @@
+"""Out-of-core tiled execution (core/memory.py + core/tiling.py).
+
+The TilePlan must be a *partition* (every outer iteration covered exactly
+once, no staged tile exceeding the double-buffered TCDM budget), stay
+bit-equal to serial execution — including programs whose working set is
+many times the TCDM — and plug into the Executor: auto policy tiles
+exactly the programs that don't fit; ``autotune="measure"`` races the
+candidate policies; the stage pipeline's ``overlap`` transport stays
+bit-equal with no hard barriers.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import (Agu, CommandStream, Descriptor, ExecutionPolicy,
+                        Executor, NtxClusterSpec, NtxMemSpec, Opcode,
+                        PAPER_CLUSTER, PAPER_MEM, Program, StageSchedule,
+                        TilePlan, clear_measured_policy_cache, fits,
+                        gemm, working_set_bytes)
+from repro.core.tiling import splittable
+from repro.kernels import ops
+
+RNG = np.random.default_rng(7)
+
+#: a toy hierarchy: 4 KiB TCDM = 1024 fp32 elements, 512-element budget
+TINY = NtxMemSpec(tcdm_bytes=4096)
+
+
+def _arr(n):
+    return RNG.standard_normal(n).astype(np.float32)
+
+
+def _chain_program(n, lanes=1):
+    prog = Program()
+    outs = []
+    for i in range(lanes):
+        x = prog.buffer((n,), name=f"x{i}", init=_arr(n))
+        t = prog.thresh(x, 0.2)
+        prog.relu(t, out=t)
+        prog.axpy(1.5, t, x, out=t)
+        outs.append(t)
+    return prog, outs
+
+
+# ----------------------------------------------------------------------
+# NtxMemSpec: the capacity model
+# ----------------------------------------------------------------------
+def test_memspec_paper_defaults():
+    assert PAPER_MEM.tcdm_bytes == PAPER_CLUSTER.tcdm_bytes == 64 * 1024
+    assert PAPER_MEM.tcdm_banks == 32
+    assert PAPER_MEM.dma_bw == pytest.approx(5e9)        # 64-bit AXI @ 625MHz
+    assert PAPER_MEM.capacity_elems == 16384
+    assert PAPER_MEM.buffer_budget_elems == 8192          # double buffered
+
+
+def test_memspec_from_cluster_override():
+    spec = NtxClusterSpec(tcdm_bytes=128 * 1024, axi_bytes_per_cycle=16)
+    m = NtxMemSpec.from_cluster(spec)
+    assert m.tcdm_bytes == 128 * 1024
+    assert m.dma_bw == 16 * spec.cluster_freq_hz
+    m2 = NtxMemSpec.from_cluster(spec, hbm_latency_s=5e-7)
+    assert m2.hbm_latency_s == 5e-7
+
+
+def test_fits_and_working_set():
+    prog, _ = _chain_program(256)          # x + t = 512 elems = 2 KiB
+    descs = list(prog.descriptors)
+    assert working_set_bytes(descs) == 4 * 512
+    assert fits(descs, TINY)
+    big, _ = _chain_program(4096)          # 32 KiB >> 4 KiB
+    assert not fits(list(big.descriptors), TINY)
+
+
+def test_memspec_pallas_block():
+    b = TINY.pallas_block_elems(n_streams=2)
+    assert b % 128 == 0 and b >= 128
+    assert 2 * b <= max(256, TINY.capacity_elems)
+
+
+# ----------------------------------------------------------------------
+# Splittability legality
+# ----------------------------------------------------------------------
+def test_splittable_classification():
+    ew = Descriptor(bounds=(64,), opcode=Opcode.RELU,
+                    agu0=Agu(0, (1,)), agu2=Agu(64, (1,)))
+    assert splittable(ew)
+    inplace = Descriptor(bounds=(64,), opcode=Opcode.RELU,
+                         agu0=Agu(0, (1,)), agu2=Agu(0, (1,)))
+    assert splittable(inplace)
+    # a shifted copy reads what other tiles write: not splittable
+    shifted = Descriptor(bounds=(64,), opcode=Opcode.COPY,
+                         agu0=Agu(0, (1,)), agu2=Agu(32, (1,)))
+    assert not splittable(shifted)
+    # a whole-nest reduction must keep its accumulate order
+    red = Descriptor(bounds=(64,), opcode=Opcode.VSUM, init_level=1,
+                     store_level=1, agu0=Agu(0, (1,)), agu2=Agu(100, (0,)))
+    assert not splittable(red)
+    # GEMM splits along the outer (m) loop
+    assert splittable(gemm(16, 16, 16, 0, 256, 512))
+
+
+# ----------------------------------------------------------------------
+# The partition property
+# ----------------------------------------------------------------------
+def _assert_partition(plan, mem_spec):
+    """Every outer span covered exactly once; no staged tile exceeds the
+    double-buffered budget; write hulls within an item are disjoint."""
+    by_item = {}
+    for t in plan.tiles:
+        by_item.setdefault(t.item, []).append(t)
+    for item_idx, tiles in by_item.items():
+        item = plan.items[item_idx]
+        if getattr(item, "spill", False):
+            continue
+        # outer ranges chain exactly: [0, c), [c, 2c), ..., [.., B)
+        outer = sorted(t.outer for t in tiles)
+        assert outer[0][0] == 0
+        for (a0, a1), (b0, b1) in zip(outer, outer[1:]):
+            assert a1 == b0, f"gap/overlap in outer split: {outer}"
+        # per-tile footprint respects the double-buffer budget
+        for t in tiles:
+            assert t.footprint_elems <= mem_spec.buffer_budget_elems
+            assert 2 * t.footprint_elems * mem_spec.elem_bytes \
+                <= mem_spec.tcdm_bytes
+        # write hulls pairwise disjoint (each output covered exactly once)
+        hulls = sorted(h for t in tiles for h in t.out_hulls)
+        for (a0, a1), (b0, b1) in zip(hulls, hulls[1:]):
+            assert a1 <= b0, f"overlapping write hulls: {hulls}"
+
+
+def test_partition_property_chain():
+    prog, _ = _chain_program(4096)
+    plan = TilePlan(list(prog.descriptors), TINY, image_elems=prog.size)
+    assert plan.stats["n_tiles"] > 1
+    assert plan.stats["n_spill_items"] == 0
+    _assert_partition(plan, TINY)
+
+
+def test_partition_property_random_programs():
+    """Deterministic stand-in for the hypothesis property: random
+    streaming/MAC programs all plan as valid partitions and execute
+    bit-equal (or numerically equal for MAC nests) to serial."""
+    for seed in range(20):
+        rng = np.random.default_rng(seed)
+        prog, has_mac = _random_program(rng)
+        descs = list(prog.descriptors)
+        mem = prog.pack()
+        spec = NtxMemSpec(tcdm_bytes=int(rng.choice([1024, 4096, 16384])))
+        plan = TilePlan(descs, spec, image_elems=prog.size)
+        _assert_partition(plan, spec)
+        want = np.asarray(CommandStream(descs).execute(mem))
+        for overlap in (True, False):
+            got = np.asarray(plan.execute(mem, overlap=overlap))
+            if has_mac:
+                np.testing.assert_allclose(want, got, rtol=1e-5, atol=1e-5,
+                                           err_msg=f"seed {seed}")
+            else:
+                np.testing.assert_array_equal(got, want,
+                                              err_msg=f"seed {seed}")
+
+
+def _random_program(rng):
+    """A random mix of chains, axpy lanes, reductions, memset and MAC
+    nests over Program-allocated buffers."""
+    prog = Program()
+    has_mac = False
+    for _ in range(rng.integers(1, 5)):
+        kind = rng.choice(["chain", "axpy", "reduce", "set", "gemv",
+                           "gemm"])
+        n = int(rng.choice([64, 256, 1024]))
+        if kind == "chain":
+            x = prog.buffer((n,), init=rng.standard_normal(n)
+                            .astype(np.float32))
+            t = prog.thresh(x, float(rng.uniform(-1, 1)))
+            if rng.random() < 0.7:
+                prog.relu(t, out=t)
+        elif kind == "axpy":
+            x = prog.buffer((n,), init=rng.standard_normal(n)
+                            .astype(np.float32))
+            y = prog.buffer((n,), init=rng.standard_normal(n)
+                            .astype(np.float32))
+            prog.axpy(float(rng.uniform(-2, 2)), x, y)
+        elif kind == "reduce":
+            x = prog.buffer((n,), init=rng.standard_normal(n)
+                            .astype(np.float32))
+            prog.reduce(str(rng.choice(["sum", "max", "argmax"])), x)
+        elif kind == "set":
+            out = prog.buffer((n,))
+            prog.set(out, float(rng.uniform(-1, 1)))
+        elif kind == "gemv":
+            m = int(rng.choice([8, 24]))
+            A = prog.buffer((m, 16), init=rng.standard_normal((m, 16))
+                            .astype(np.float32))
+            x = prog.buffer((16,), init=rng.standard_normal(16)
+                            .astype(np.float32))
+            prog.gemv(A, x)
+            has_mac = True
+        else:
+            m = int(rng.choice([8, 16]))
+            A = prog.buffer((m, 12), init=rng.standard_normal((m, 12))
+                            .astype(np.float32))
+            B = prog.buffer((12, 8), init=rng.standard_normal((12, 8))
+                            .astype(np.float32))
+            prog.gemm(A, B)
+            has_mac = True
+    return prog, has_mac
+
+
+# ----------------------------------------------------------------------
+# Bit-equality: tiled vs serial and vs every resident policy
+# ----------------------------------------------------------------------
+def test_tiled_4x_tcdm_bit_equal_all_policies():
+    """The acceptance program: working set >= 4x TCDM executes bit-equal
+    under policy='tiled' (both DMA schedules) and matches all four
+    resident policies."""
+    n = 2048                                     # x+t = 16 KiB = 4x TINY
+    prog, _ = _chain_program(n, lanes=2)
+    descs = list(prog.descriptors)
+    assert working_set_bytes(descs) >= 4 * TINY.tcdm_bytes
+    mem = prog.pack()
+    want = np.asarray(CommandStream(descs).execute(mem))
+    for overlap in (True, False):
+        ex = Executor(ExecutionPolicy(policy="tiled", mem=TINY,
+                                      dma_overlap=overlap))
+        got = np.asarray(ex.run(prog).mem)
+        np.testing.assert_array_equal(got, want, err_msg=f"{overlap=}")
+        assert ex.stats["scheduler"]["overlap_used"] is overlap
+    for pol in ("serial", "fused", "multistream", "pipeline"):
+        got = np.asarray(Executor(policy=pol).run(prog).mem)
+        np.testing.assert_array_equal(got, want, err_msg=pol)
+
+
+def test_tiled_with_reduce_tail_and_gemm():
+    rng = np.random.default_rng(3)
+    prog = Program()
+    n = 3000
+    x = prog.buffer((n,), name="x",
+                    init=rng.standard_normal(n).astype(np.float32))
+    t = prog.thresh(x, 0.1)
+    prog.relu(t, out=t)
+    s = prog.reduce("sum", t)
+    A = prog.buffer((24, 16), name="A",
+                    init=rng.standard_normal((24, 16)).astype(np.float32))
+    B = prog.buffer((16, 8), name="B",
+                    init=rng.standard_normal((16, 8)).astype(np.float32))
+    C = prog.gemm(A, B)
+    prog.relu(C, out=C)
+    descs = list(prog.descriptors)
+    mem = prog.pack()
+    want = np.asarray(CommandStream(descs).execute(mem))
+    plan = TilePlan(descs, TINY, image_elems=prog.size)
+    got = np.asarray(plan.execute(mem, overlap=True))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    # the oversize reduction stayed a single ordered command (spill)
+    assert plan.stats["n_spill_items"] >= 1
+
+
+def test_tiled_flattened_descriptor_program_is_equivalent():
+    """plan.descriptors is itself a valid serial program over the
+    extended image — the DMA primitive is ordinary COPY commands."""
+    prog, _ = _chain_program(2048)
+    descs = list(prog.descriptors)
+    mem = prog.pack()
+    plan = TilePlan(descs, TINY, image_elems=prog.size)
+    assert all(isinstance(d, Descriptor) for d in plan.descriptors)
+    padded = jnp.concatenate(
+        [jnp.asarray(mem), jnp.zeros(plan.total_elems - prog.size,
+                                     jnp.float32)])
+    via_flat = np.asarray(
+        CommandStream(plan.descriptors).execute(padded))[:prog.size]
+    want = np.asarray(CommandStream(descs).execute(mem))
+    np.testing.assert_array_equal(via_flat, want)
+
+
+def test_in_place_chain_stays_bank_resident():
+    """The fused-chain group tiles as a unit: 3 chained commands over one
+    region produce ONE staged compute stream per tile, not three
+    independently tiled round trips."""
+    prog, _ = _chain_program(4096)
+    plan = TilePlan(list(prog.descriptors), TINY, image_elems=prog.size)
+    assert plan.stats["n_items"] == 1
+    tile = plan.tiles[0]
+    assert len(tile.compute) == 3
+    assert tile.compute_stream is not None
+    # x streams in, T streams out; T is produced, not loaded
+    assert len(tile.dma_in) == 1 and len(tile.dma_out) == 1
+
+
+def test_chain_head_second_operand_aliasing_carried_region():
+    """Regression: a chain head whose SECOND operand is (or overlaps)
+    the carried region must not group-tile as a produce-only chain —
+    identical aliasing forces the T slot to load, partial overlap falls
+    back to the resident path. Both stay bit-equal to serial."""
+    n = 1024
+    spec = NtxMemSpec(tcdm_bytes=2048)
+    mem0 = jnp.asarray(_arr(4096))
+    # y == T: add(x, T) -> T reads the pre-chain carried region
+    alias = Descriptor(bounds=(n,), opcode=Opcode.ADD,
+                       agu0=Agu(2048, (1,)), agu1=Agu(0, (1,)),
+                       agu2=Agu(0, (1,)))
+    follow = Descriptor(bounds=(n,), opcode=Opcode.RELU,
+                        agu0=Agu(0, (1,)), agu2=Agu(0, (1,)))
+    for descs in ([alias, follow],
+                  # y partially overlaps T: must reject group tiling
+                  [Descriptor(bounds=(n,), opcode=Opcode.ADD,
+                              agu0=Agu(2048, (1,)), agu1=Agu(512, (1,)),
+                              agu2=Agu(0, (1,))), follow]):
+        plan = TilePlan(descs, spec, image_elems=4096)
+        want = np.asarray(CommandStream(descs).execute(mem0))
+        for overlap in (True, False):
+            got = np.asarray(plan.execute(mem0, overlap=overlap))
+            np.testing.assert_array_equal(got, want)
+
+
+# ----------------------------------------------------------------------
+# Executor integration
+# ----------------------------------------------------------------------
+def test_auto_policy_tiles_oversize_program():
+    prog, _ = _chain_program(4096)
+    ex = Executor(ExecutionPolicy(mem=TINY))
+    res = ex.run(prog)
+    assert ex.stats["policy"] == "tiled"
+    assert ex.stats["gains"]["tiling"]["fits"] == 0.0
+    want = np.asarray(CommandStream(prog.descriptors).execute(prog.pack()))
+    np.testing.assert_array_equal(np.asarray(res.mem), want)
+
+
+def test_auto_policy_keeps_fitting_program_resident():
+    prog, _ = _chain_program(128)
+    ex = Executor(ExecutionPolicy(mem=TINY))
+    ex.run(prog)
+    assert ex.stats["policy"] != "tiled"
+
+
+def test_tiling_gain_model():
+    from repro.perfmodel.ntx import tiling_gain, policy_gains
+    prog, _ = _chain_program(4096)
+    descs = list(prog.descriptors)
+    g = tiling_gain(descs, mem=TINY)
+    assert g["fits"] == 0.0
+    assert g["n_tiles"] > 1
+    assert 1.0 <= g["speedup"] <= 2.0        # max(c,d) vs c+d roofline
+    assert g["time_tiled_overlap_s"] < g["time_tiled_serial_s"]
+    pg = policy_gains(descs, mem=TINY)
+    assert pg["tiling"]["fits"] == 0.0
+    small, _ = _chain_program(64)
+    assert tiling_gain(list(small.descriptors), mem=TINY)["fits"] == 1.0
+
+
+def test_measured_auto_policy_races_and_caches():
+    clear_measured_policy_cache()
+    prog, _ = _chain_program(256, lanes=4)
+    ex = Executor(ExecutionPolicy(autotune="measure"))
+    r1 = ex.run(prog)
+    g = ex.stats["gains"]
+    assert ex.stats["policy"] in ("serial", "fused", "multistream",
+                                  "pipeline")
+    assert set(g["measured"]) <= {"serial", "fused", "multistream",
+                                  "pipeline"}
+    assert g["measured_cached"] is False
+    # same program through a fresh Executor: the memo answers
+    ex2 = Executor(ExecutionPolicy(autotune="measure"))
+    mem = prog.pack()
+    ex2.run_descriptors(prog.descriptors, mem)
+    assert ex2.stats["gains"]["measured_cached"] is True
+    assert ex2.stats["policy"] == ex.stats["policy"]
+    # measured pick still bit-equal to the model's pick
+    want = np.asarray(Executor().run(prog).mem)
+    np.testing.assert_array_equal(np.asarray(r1.mem), want)
+    clear_measured_policy_cache()
+
+
+def test_measured_policy_beats_model_on_cpu_mesh_pricing():
+    """The ROADMAP gap: the hardware model prices clusters, not the host.
+    With many uniform lanes the measured pick must be a policy that
+    actually wins on CPU — and never an unraceable candidate."""
+    clear_measured_policy_cache()
+    prog, _ = _chain_program(512, lanes=8)
+    ex = Executor(ExecutionPolicy(autotune="measure"))
+    ex.run(prog)
+    times = ex.stats["gains"]["measured"]
+    best = min(times, key=times.get)
+    assert ex.stats["policy"] == best
+    clear_measured_policy_cache()
+
+
+# ----------------------------------------------------------------------
+# Overlapped stage execution (the ROADMAP §IV item)
+# ----------------------------------------------------------------------
+def _producer_consumer(n=512, lanes=3):
+    prog = Program()
+    for i in range(lanes):
+        x = prog.buffer((n,), name=f"x{i}", init=_arr(n))
+        t = prog.thresh(x, 0.2)
+        prog.relu(t, out=t)
+        u = prog.thresh(t, 0.1)
+        prog.relu(u, out=u)
+    return prog
+
+
+def test_stage_overlap_bit_equal():
+    prog = _producer_consumer()
+    descs = list(prog.descriptors)
+    mem = prog.pack()
+    want = np.asarray(CommandStream(descs).execute(mem))
+    ss = StageSchedule(descs, n_clusters=3)
+    got = np.asarray(ss.execute(mem, mode="overlap"))
+    np.testing.assert_array_equal(got, want)
+    assert ss.stats["mode_used"] == "overlap"
+    # through the Executor transport knob
+    ex = Executor(ExecutionPolicy(policy="pipeline", transport="overlap",
+                                  n_clusters=3))
+    got2 = np.asarray(ex.run(prog).mem)
+    np.testing.assert_array_equal(got2, want)
+
+
+def test_stage_overlap_random_dependent_programs():
+    for seed in range(15):
+        rng = np.random.default_rng(100 + seed)
+        prog, has_mac = _random_program(rng)
+        # add dependent consumers over earlier outputs
+        for h in list(prog.buffers)[:2]:
+            if len(h.shape) == 1 and h.size >= 8:
+                prog.thresh(h, 0.0)
+        descs = list(prog.descriptors)
+        mem = prog.pack()
+        want = np.asarray(CommandStream(descs).execute(mem))
+        got = np.asarray(StageSchedule(descs, n_clusters=3)
+                         .execute(mem, mode="overlap"))
+        if has_mac:
+            np.testing.assert_allclose(want, got, rtol=1e-5, atol=1e-5,
+                                       err_msg=f"seed {seed}")
+        else:
+            np.testing.assert_array_equal(got, want,
+                                          err_msg=f"seed {seed}")
+
+
+def test_stage_overlap_model_never_worse():
+    prog = _producer_consumer()
+    ss = StageSchedule(list(prog.descriptors), n_clusters=2)
+    assert ss.model_time(overlap=True) <= ss.model_time(overlap=False)
+    from repro.perfmodel.ntx import pipeline_gain
+    g = pipeline_gain(list(prog.descriptors), n_clusters=2)
+    assert g["overlap_speedup"] >= g["speedup"] > 0
+    assert g["time_handoff_exposed_s"] <= g["time_handoff_s"]
+
+
+# ----------------------------------------------------------------------
+# Pallas: the double-buffered grid option
+# ----------------------------------------------------------------------
+def test_pallas_chain_double_buffered_grid_matches_ref():
+    x = _arr(4096).reshape(1, -1)
+    stages = [("thresh", 0.2), ("relu", 0.0)]
+    want = ops.elementwise_chain(stages, jnp.asarray(x))
+    block = PAPER_MEM.pallas_block_elems(n_streams=2)
+    with ops.backend("pallas_interpret"):
+        got = ops.elementwise_chain(stages, jnp.asarray(x), block=block)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
